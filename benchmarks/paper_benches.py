@@ -1,0 +1,212 @@
+"""One benchmark per paper table/figure (EXPERIMENTS.md index).
+
+Each function returns a list of result dicts and is registered in
+``BENCHES``; benchmarks/run.py prints the ``name,us_per_call,derived`` CSV.
+``fast=True`` (default for CI) trims epochs/samples; ``--full`` reproduces
+the paper-scale runs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fxp
+from repro.core import junction_pipeline as JP
+from repro.core import paper_net as PN
+from repro.data.mnist import paper_dataset
+
+
+def _timed(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n, out
+
+
+def _train(cfg, xs, ys, epochs, pipelined=False):
+    p = PN.init(cfg)
+    if pipelined:
+        step = jax.jit(lambda p: PN.train_epoch_pipelined(p, xs, ys, 2.0 ** -3, cfg))
+        for _ in range(epochs):
+            p, corr = step(p)
+        return p, float(corr[-1000:].mean())
+    step = jax.jit(lambda p: PN.train_epoch(p, xs, ys, 2.0 ** -3, cfg))
+    corr = None
+    for _ in range(epochs):
+        p, _, corr = step(p)
+    return p, float(corr[-1000:].mean())
+
+
+# ------------------------------------------------------- Table I + timing
+def table1_throughput(fast=True):
+    """Implemented network config + block-cycle throughput model vs measured
+    software step time (the model is the paper's Sec. III-D-6 claim)."""
+    cfg = PN.PaperNetConfig()
+    xs, ys, _ = paper_dataset(1024 if fast else 12544)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    p = PN.init(cfg)
+    ep = jax.jit(lambda p: PN.train_epoch(p, xs, ys, 2.0 ** -3, cfg))
+    dt, _ = _timed(ep, p, n=2)
+    per_input_sw = dt / xs.shape[0]
+    rows = [{
+        "name": "table1.block_cycle_model_us",
+        "us_per_call": JP.block_cycle_s(cfg) * 1e6,     # paper: 2.27 us
+        "derived": f"W/z+2 cycles @15MHz; paper reports 2.27us",
+    }, {
+        "name": "table1.sw_per_input_us",
+        "us_per_call": per_input_sw * 1e6,
+        "derived": f"jax cpu online-SGD per input; params={cfg.n_params()}",
+    }, {
+        "name": "table1.overall_density",
+        "us_per_call": 0.0,
+        "derived": f"{cfg.overall_density():.5f} (paper 0.07576)",
+    }]
+    return rows
+
+
+# ------------------------------------------------------- Table II bit width
+def table2_bitwidth(fast=True):
+    xs, ys, _ = paper_dataset(2048 if fast else 12544)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    epochs = (1, 3) if fast else (1, 15)
+    rows = []
+    for fmt in fxp.PAPER_TRIPLETS:
+        cfg = PN.PaperNetConfig(fmt=fmt)
+        t0 = time.perf_counter()
+        _, acc1 = _train(cfg, xs, ys, epochs[0])
+        _, accN = _train(cfg, xs, ys, epochs[1])
+        rows.append({
+            "name": f"table2.b{fmt.bw}_{fmt.bn}_{fmt.bf}",
+            "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "derived": f"acc@{epochs[0]}ep={acc1:.3f} acc@{epochs[1]}ep={accN:.3f}",
+        })
+    return rows
+
+
+# ------------------------------------------------------- Fig. 4 ranges
+def fig4_ranges(fast=True):
+    xs, ys, _ = paper_dataset(2048 if fast else 12544)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    cfg = PN.PaperNetConfig(fmt=None)
+    p = PN.init(cfg)
+    rows = []
+    step = jax.jit(lambda p: PN.train_epoch(p, xs, ys, 2.0 ** -3, cfg))
+    for ep in range(3 if fast else 15):
+        p, _, corr = step(p)
+        w_max = max(float(jnp.max(jnp.abs(j["w"]))) for j in p["junctions"])
+        b_max = max(float(jnp.max(jnp.abs(j["b"]))) for j in p["junctions"])
+        rows.append({
+            "name": f"fig4.epoch{ep + 1}",
+            "us_per_call": 0.0,
+            "derived": f"max|w|={w_max:.3f} max|b|={b_max:.3f} "
+                       f"acc={float(corr[-500:].mean()):.3f} (paper: stays < 8)",
+        })
+    return rows
+
+
+# ------------------------------------------------------- Fig. 5 clipping
+def fig5_dynamic_range(fast=True):
+    """Sparse vs FC pre-activation |sum w*a + b| distribution and clip %."""
+    xs, ys, _ = paper_dataset(1024 if fast else 12544)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    rows = []
+    for name, d_out in [("sparse", (4, 16)), ("fc", (64, 32))]:
+        cfg = PN.PaperNetConfig(d_out=d_out, fmt=None,
+                                z=(128, 32) if name == "sparse" else (1024, 64))
+        p, acc = _train(cfg, xs, ys, 2 if fast else 15)
+        acts, _ = PN.forward(p, xs[:512], cfg)
+        pre = jnp.take(p["junctions"][0]["w"] * 0, jnp.array([0]))  # placeholder
+        # recompute junction-1 pre-activation explicitly
+        jp = cfg, p
+        j0 = p["junctions"][0]
+        gathered = jnp.take(xs[:512], j0["idx"], axis=-1)
+        s = jnp.sum(j0["w"] * gathered, axis=-1) + j0["b"]
+        clip_pct = float(jnp.mean((jnp.abs(s) > 8.0)))
+        rows.append({
+            "name": f"fig5.{name}",
+            "us_per_call": 0.0,
+            "derived": f"clip%={100 * clip_pct:.1f} max|s|={float(jnp.max(jnp.abs(s))):.2f} "
+                       f"std={float(jnp.std(s)):.2f} (paper: sparse 17% vs FC 57%)",
+        })
+    return rows
+
+
+# ------------------------------------------------------- Fig. 6 activations
+def fig6_activations(fast=True):
+    xs, ys, _ = paper_dataset(2048 if fast else 12544)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    rows = []
+    for act in ["sigmoid", "relu8", "relu1"]:
+        cfg = PN.PaperNetConfig(fmt=fxp.PAPER_FMT, activation=act)
+        _, acc = _train(cfg, xs, ys, 2 if fast else 10)
+        rows.append({"name": f"fig6.{act}", "us_per_call": 0.0,
+                     "derived": f"acc={acc:.3f} (paper: sigmoid ~ relu8 > relu1 early)"})
+    return rows
+
+
+# ------------------------------------------------------- Fig. 7 density
+def fig7_density(fast=True):
+    xs, ys, _ = paper_dataset(2048 if fast else 12544)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    rows = []
+    for d2_out in [2, 4, 8, 16, 32]:
+        cfg = PN.PaperNetConfig(d_out=(4, d2_out), z=(128, 32))
+        _, acc = _train(cfg, xs, ys, 2 if fast else 15)
+        dens = d2_out / 32
+        rows.append({"name": f"fig7.j2_density_{dens:.3f}",
+                     "us_per_call": 0.0,
+                     "derived": f"acc={acc:.3f} (paper: 50% optimal for junction 2)"})
+    return rows
+
+
+# ------------------------------------------------------- Fig. 8 z sweep
+def fig8_z_sweep(fast=True):
+    rows = []
+    for r in JP.z_sweep_configs(PN.PaperNetConfig()):
+        rows.append({
+            "name": f"fig8.total_z_{r['total_z']}",
+            "us_per_call": r["block_cycle_s"] * 1e6,
+            "derived": f"throughput={r['throughput_per_s']:.0f}/s "
+                       f"multipliers={r['multipliers']} "
+                       f"(paper: 2.27us @ z=160, 0.4us at max z)",
+        })
+    return rows
+
+
+# ------------------------------------------------------- pipeline parity
+def pipeline_parity(fast=True):
+    """Junction pipelining (stale updates) vs sequential — the Fig. 1 / 3L
+    claim: same accuracy, 3L ops in flight."""
+    xs, ys, _ = paper_dataset(2048 if fast else 12544)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    cfg = PN.PaperNetConfig(fmt=fxp.PAPER_FMT)
+    t0 = time.perf_counter()
+    _, acc_seq = _train(cfg, xs, ys, 2 if fast else 14)
+    t1 = time.perf_counter()
+    _, acc_pipe = _train(cfg, xs, ys, 2 if fast else 14, pipelined=True)
+    t2 = time.perf_counter()
+    return [{
+        "name": "pipeline.sequential", "us_per_call": (t1 - t0) * 1e6,
+        "derived": f"acc={acc_seq:.3f}",
+    }, {
+        "name": "pipeline.junction_pipelined", "us_per_call": (t2 - t1) * 1e6,
+        "derived": f"acc={acc_pipe:.3f} speedup_model=3L={3 * cfg.n_junctions}x "
+                   f"bubble=0",
+    }]
+
+
+BENCHES = {
+    "table1": table1_throughput,
+    "table2": table2_bitwidth,
+    "fig4": fig4_ranges,
+    "fig5": fig5_dynamic_range,
+    "fig6": fig6_activations,
+    "fig7": fig7_density,
+    "fig8": fig8_z_sweep,
+    "pipeline": pipeline_parity,
+}

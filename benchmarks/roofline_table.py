@@ -1,0 +1,70 @@
+"""Roofline aggregation: results/dryrun/*.json -> the EXPERIMENTS.md tables.
+
+Deliverable (g): per (arch x shape x mesh) the three roofline terms from
+the compiled dry-run, dominant bottleneck, MODEL_FLOPS / HLO_FLOPs ratio,
+per-device memory fit.  Usable as a library (EXPERIMENTS.md generation) and
+as a bench entry (prints summary rows).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / pattern))):
+        r = json.loads(Path(f).read_text())
+        rows.append(r)
+    return rows
+
+
+def table_rows(cells=None) -> list[dict]:
+    out = []
+    for r in cells or load_cells():
+        if not r.get("ok"):
+            out.append({"cell": r["cell"], "ok": False,
+                        "error": r.get("error", "?")[:120]})
+            continue
+        rl = r["roofline"]
+        t = {"compute": rl["t_compute"], "memory": rl["t_memory"],
+             "collective": rl["t_collective"]}
+        dom = rl["dominant"]
+        bound = max(t.values())
+        out.append({
+            "cell": r["cell"], "ok": True, "mesh": r["mesh"],
+            "arch": r["arch"], "shape": r["shape"],
+            "variant": r.get("variant", "dense"),
+            "t_compute_s": round(t["compute"], 4),
+            "t_memory_s": round(t["memory"], 4),
+            "t_collective_s": round(t["collective"], 4),
+            "dominant": dom,
+            "roofline_fraction": round(t["compute"] / bound, 4) if bound else 0.0,
+            "useful_fraction": round(r.get("useful_fraction", 0.0), 4),
+            "per_device_gb": r.get("per_device_gb"),
+            "fits_16gb": r.get("fits_16gb"),
+            "microbatches": r.get("microbatches", 1),
+            "collectives": {k: v["count"] for k, v in rl["coll_detail"].items()},
+        })
+    return out
+
+
+def bench(fast=True):
+    rows = []
+    for r in table_rows():
+        if not r.get("ok"):
+            rows.append({"name": f"roofline.{r['cell']}", "us_per_call": -1,
+                         "derived": f"FAILED {r['error']}"})
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append({
+            "name": f"roofline.{r['cell']}",
+            "us_per_call": bound * 1e6,
+            "derived": (f"dom={r['dominant']} frac={r['roofline_fraction']} "
+                        f"useful={r['useful_fraction']} "
+                        f"perdev={r['per_device_gb']}GB fit={r['fits_16gb']}"),
+        })
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,fig8]
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale epochs/samples (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma list of bench names (default: all)")
+    args = ap.parse_args()
+
+    from benchmarks import paper_benches, roofline_table
+
+    benches = dict(paper_benches.BENCHES)
+    benches["roofline"] = roofline_table.bench
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn(fast=not args.full)
+        except Exception as e:  # keep the harness running
+            print(f"{name},-1,ERROR {type(e).__name__}: {str(e)[:160]}")
+            failures += 1
+            continue
+        for r in rows:
+            derived = str(r["derived"]).replace(",", ";")
+            print(f"{r['name']},{r['us_per_call']:.2f},{derived}")
+        sys.stderr.write(f"[bench] {name}: {len(rows)} rows "
+                         f"in {time.perf_counter() - t0:.1f}s\n")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

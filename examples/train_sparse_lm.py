@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-param LM with the paper's pre-defined
+block sparsity on its FFNs, with checkpointing and auto-resume.
+
+    PYTHONPATH=src python examples/train_sparse_lm.py --steps 300
+
+The config is a scaled-down stablelm-family decoder (d_model 512, 8 layers,
+vocab 50304 -> ~100M params syntax); ``--dense`` trains the FC baseline the
+paper compares against — at density 0.25 the sparse FFN does 4x less FFN
+compute for a near-identical loss curve (EXPERIMENTS.md Sec. paper-claims).
+"""
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.sparsity import SparsityConfig
+from repro.data.pipeline import LMTokenPipeline
+from repro.models import model as M
+from repro.optim import adam, cosine_schedule
+from repro.train.steps import make_train_step
+from repro.train.train_loop import TrainLoopConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--dense", action="store_true", help="FC baseline")
+    ap.add_argument("--density", type=float, default=0.25)
+    ap.add_argument("--ckpt", default="/tmp/repro_sparse_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        registry.get("stablelm-3b"),
+        n_layers=8, d_model=512, n_heads=8, kv_heads=8, head_dim=64,
+        d_ff=1536, max_seq=2048, attn_chunk=128,
+    )
+    if not args.dense:
+        cfg = cfg.with_sparsity(SparsityConfig(
+            density=args.density, block=128, where="ffn"))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params)
+                   if jnp.issubdtype(p.dtype, jnp.inexact))
+    print(f"{'dense' if args.dense else 'sparse'} model: {n_params / 1e6:.1f}M "
+          f"trainable params")
+
+    opt = adam(cosine_schedule(3e-4, warmup=20, total=args.steps))
+    opt_state = opt.init(params)
+    ts = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    pipe = LMTokenPipeline(cfg, args.batch, args.seq)
+    t0 = time.time()
+    res = run(TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                              ckpt_every=100, log_every=20),
+              ts, params, opt_state, pipe)
+    h = res["history"]
+    print(f"done in {time.time() - t0:.0f}s: loss {h[0]['loss']:.3f} -> "
+          f"{h[-1]['loss']:.3f} over {res['step']} steps")
+
+
+if __name__ == "__main__":
+    main()

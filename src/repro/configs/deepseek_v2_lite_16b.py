@@ -1,0 +1,4 @@
+"""Assigned architecture config — see registry.py for source notes."""
+from repro.configs.registry import DEEPSEEK_V2_LITE_16B as CONFIG
+
+__all__ = ["CONFIG"]

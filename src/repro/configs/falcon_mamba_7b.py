@@ -1,0 +1,4 @@
+"""Assigned architecture config — see registry.py for source notes."""
+from repro.configs.registry import FALCON_MAMBA_7B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config — see registry.py for source notes."""
+from repro.configs.registry import LLAVA_NEXT_MISTRAL_7B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config — see registry.py for source notes."""
+from repro.configs.registry import STABLELM_3B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,130 @@
+"""Bit-accurate fixed-point arithmetic (paper Sec. III-C).
+
+The paper's configuration is the bit triplet (b_w, b_n, b_f): total bits,
+integer bits, fraction bits, with b_w = b_n + b_f + 1 (sign).  Range is
+[-2^b_n, 2^b_n - 2^-b_f], precision 2^-b_f.  All computed values and
+trainable parameters — a, a-dot, delta, w, b — share one triplet; adders
+and multipliers *clip* (saturate) instead of wrapping (Sec. III-C-3).
+
+We simulate on fp32 numbers constrained to the fixed-point grid: every op
+is followed by ``quantize`` (round-to-nearest-even + saturate), and sums
+are reduced by a *clipping tree adder* of depth log2(d_in) exactly like the
+FPGA's arithmetic (Sec. III-D-3) — intermediate clipping is part of the
+semantics, not an afterthought.
+
+The sigmoid LUT mirrors Sec. III-D-1: all 2^b_w possible codes are
+pre-evaluated (no interpolation), sigma to b_f fractional bits, sigma' to
+b_f - 2 bits (its range is [0, 1/4]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FxpFormat", "PAPER_TRIPLETS", "quantize", "tree_sum_clipped",
+           "sigmoid_tables", "lut_sigmoid", "encode", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FxpFormat:
+    bw: int   # total bits
+    bn: int   # integer bits
+    bf: int   # fraction bits
+
+    def __post_init__(self):
+        assert self.bw == self.bn + self.bf + 1, "b_w = b_n + b_f + 1"
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.bf)
+
+    @property
+    def max_val(self) -> float:
+        return float(2 ** self.bn) - 1.0 / self.scale
+
+    @property
+    def min_val(self) -> float:
+        return -float(2 ** self.bn)
+
+    @property
+    def n_codes(self) -> int:
+        return 2 ** self.bw
+
+
+# Table II of the paper
+PAPER_TRIPLETS = [FxpFormat(8, 2, 5), FxpFormat(10, 2, 7), FxpFormat(10, 3, 6),
+                  FxpFormat(12, 3, 8), FxpFormat(16, 4, 11)]
+PAPER_FMT = FxpFormat(12, 3, 8)   # the chosen configuration
+
+
+def quantize(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Round to the grid, saturate to [min_val, max_val] (clipping unit)."""
+    q = jnp.round(x.astype(jnp.float32) * fmt.scale) / fmt.scale
+    return jnp.clip(q, fmt.min_val, fmt.max_val)
+
+
+def q_mul(a, b, fmt: FxpFormat):
+    return quantize(a * b, fmt)
+
+
+def q_add(a, b, fmt: FxpFormat):
+    return quantize(a + b, fmt)
+
+
+def tree_sum_clipped(x: jax.Array, fmt: FxpFormat, axis: int = -1) -> jax.Array:
+    """Pairwise tree reduction with clipping at every adder node — the
+    hardware's log2(d_in)-deep tree adder (Sec. III-D-3)."""
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    # pad to a power of two with zeros (zeros are exact on the grid)
+    p = 1 << (n - 1).bit_length()
+    if p != n:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - n)])
+    while x.shape[-1] > 1:
+        x = q_add(x[..., 0::2], x[..., 1::2], fmt)
+    return x[..., 0]
+
+
+def encode(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """fp value on the grid -> integer code in [0, 2^bw) (two's complement)."""
+    i = jnp.round(jnp.clip(x, fmt.min_val, fmt.max_val) * fmt.scale).astype(jnp.int32)
+    return jnp.where(i < 0, i + fmt.n_codes, i)
+
+
+def decode(code: jax.Array, fmt: FxpFormat) -> jax.Array:
+    i = jnp.where(code >= fmt.n_codes // 2, code - fmt.n_codes, code)
+    return i.astype(jnp.float32) / fmt.scale
+
+
+def sigmoid_tables(fmt: FxpFormat) -> tuple[np.ndarray, np.ndarray]:
+    """(sigma table, sigma' table), one entry per code (paper: 4096 entries
+    for b_w=12).  sigma quantized to b_f bits; sigma' to b_f-2 bits since its
+    range is [0, 1/4] (paper uses 6 fractional bits at b_f=8)."""
+    codes = np.arange(fmt.n_codes)
+    vals = np.where(codes >= fmt.n_codes // 2, codes - fmt.n_codes, codes) / fmt.scale
+    sig = 1.0 / (1.0 + np.exp(-vals))
+    dsig = sig * (1.0 - sig)
+    sig_q = np.round(sig * fmt.scale) / fmt.scale
+    dscale = 2 ** max(1, fmt.bf - 2)
+    dsig_q = np.round(dsig * dscale) / dscale
+    return sig_q.astype(np.float32), dsig_q.astype(np.float32)
+
+
+def lut_sigmoid(x: jax.Array, fmt: FxpFormat, tables=None):
+    """(sigma(x), sigma'(x)) via table lookup on the code of x."""
+    if tables is None:
+        tables = sigmoid_tables(fmt)
+    sig_t, dsig_t = (jnp.asarray(t) for t in tables)
+    code = encode(x, fmt)
+    return jnp.take(sig_t, code, axis=0), jnp.take(dsig_t, code, axis=0)
+
+
+def relu_clipped(x: jax.Array, fmt: FxpFormat, clip_at: float):
+    """Paper Sec. III-C-4: ReLU clipped at 8 (=2^bn) or 1."""
+    y = jnp.clip(x, 0.0, clip_at)
+    dy = jnp.where((x > 0) & (x < clip_at), 1.0, 0.0)
+    return quantize(y, fmt), dy

@@ -1,0 +1,283 @@
+"""The paper's network (Table I), bit- and schedule-faithful.
+
+1024 -> 64 -> 32 with pre-defined sparsity (d1_out=4 / 6.25%, d2_out=16 /
+50%), trained with explicit FF/BP/UP passes per eqs. (1)-(3) — NOT autodiff
+— in (b_w,b_n,b_f) fixed-point with clipping tree adders and LUT sigmoid.
+``fmt=None`` gives the ideal floating-point reference the paper compares
+against ("within 1.5 percentage points").
+
+Two training schedules:
+  * ``train_epoch``            — sequential online SGD (one input at a time).
+  * ``train_epoch_pipelined``  — the paper's junction pipelining (Fig. 1):
+    at clock t, J1 does FF(t) and UP(t-3), J2 does FF(t-1), BP(t-2) and
+    UP(t-2), all reading start-of-clock state — weight updates are applied
+    with the paper's exact staleness.  Throughput: 1 input per block cycle,
+    3L operations in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fxp
+from repro.core.sparsity import NeuronPattern, make_neuron_pattern
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperNetConfig:
+    layers: tuple = (1024, 64, 32)          # N_0, N_1, N_2
+    d_out: tuple = (4, 16)                  # fan-out per junction (Table I)
+    z: tuple = (128, 32)                    # degree of parallelism (Table I)
+    fmt: Optional[fxp.FxpFormat] = fxp.PAPER_FMT
+    activation: str = "sigmoid"             # sigmoid | relu8 | relu1
+    init_mode: str = "random"               # random | shared (Sec. III-C-1)
+    seed: int = 0
+
+    @property
+    def n_junctions(self) -> int:
+        return len(self.layers) - 1
+
+    def d_in(self, i: int) -> int:
+        return self.layers[i] * self.d_out[i] // self.layers[i + 1]
+
+    def weights(self, i: int) -> int:
+        return self.layers[i] * self.d_out[i]
+
+    def block_cycles(self, i: int) -> int:
+        """W_i / z_i (+2 for memory-access stages, Sec. III-D-6)."""
+        return self.weights(i) // self.z[i] + 2
+
+    def density(self, i: int) -> float:
+        return self.d_out[i] / self.layers[i + 1]
+
+    def overall_density(self) -> float:
+        w = sum(self.weights(i) for i in range(self.n_junctions))
+        full = sum(self.layers[i] * self.layers[i + 1]
+                   for i in range(self.n_junctions))
+        return w / full
+
+    def n_params(self) -> int:
+        return (sum(self.weights(i) for i in range(self.n_junctions))
+                + sum(self.layers[1:]))
+
+
+def patterns(cfg: PaperNetConfig) -> list[NeuronPattern]:
+    return [make_neuron_pattern(cfg.layers[i], cfg.layers[i + 1],
+                                cfg.d_in(i), z=cfg.z[i], seed=cfg.seed + i)
+            for i in range(cfg.n_junctions)]
+
+
+def reverse_pattern(pat: NeuronPattern) -> tuple[np.ndarray, np.ndarray]:
+    """For BP: per left neuron, the (right neuron, slot) pairs reading it."""
+    n_in, d_out = pat.n_in, pat.d_out
+    rev_j = np.full((n_in, d_out), -1, np.int32)
+    rev_f = np.full((n_in, d_out), -1, np.int32)
+    fill = np.zeros(n_in, np.int64)
+    for j in range(pat.n_out):
+        for f in range(pat.idx.shape[1]):
+            k = int(pat.idx[j, f])
+            rev_j[k, fill[k]] = j
+            rev_f[k, fill[k]] = f
+            fill[k] += 1
+    assert np.all(fill == d_out), "pattern not fan-out balanced"
+    return rev_j, rev_f
+
+
+def init(cfg: PaperNetConfig, key=None) -> Params:
+    """Glorot-normal over actual degrees (Sec. III-C-1); biases initialized
+    like weights (stored in the same memories on the FPGA)."""
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    pats = patterns(cfg)
+    params: Params = {"junctions": []}
+    for i, pat in enumerate(pats):
+        k1, k2, key = jax.random.split(key, 3)
+        std = np.sqrt(2.0 / (cfg.d_out[i] + cfg.d_in(i)))
+        if cfg.init_mode == "shared":
+            # W_i/z_i unique values replicated across the z_i memories
+            n_unique = cfg.weights(i) // cfg.z[i]
+            uw = jax.random.normal(k1, (n_unique,)) * std
+            w = jnp.tile(uw, cfg.z[i]).reshape(pat.n_out, pat.idx.shape[1])
+            b = jnp.tile(uw[: max(1, pat.n_out // n_unique + 1)],
+                         n_unique)[: pat.n_out] * 0 + uw[0]
+            b = jnp.full((pat.n_out,), uw[0])
+        else:
+            w = jax.random.normal(k1, pat.idx.shape) * std
+            b = jax.random.normal(k2, (pat.n_out,)) * std
+        rev_j, rev_f = reverse_pattern(pat)
+        if cfg.fmt is not None:
+            w = fxp.quantize(w, cfg.fmt)
+            b = fxp.quantize(b, cfg.fmt)
+        params["junctions"].append({
+            "w": w, "b": b,
+            "idx": jnp.asarray(pat.idx),
+            "rev_j": jnp.asarray(rev_j), "rev_f": jnp.asarray(rev_f),
+        })
+    return params
+
+
+# ------------------------------------------------------------------ ops
+def _q(x, fmt):
+    return x if fmt is None else fxp.quantize(x, fmt)
+
+
+def _act(s, cfg: PaperNetConfig, tables):
+    if cfg.activation == "sigmoid":
+        if cfg.fmt is None:
+            a = jax.nn.sigmoid(s)
+            return a, a * (1 - a)
+        return fxp.lut_sigmoid(s, cfg.fmt, tables)
+    clip_at = 8.0 if cfg.activation == "relu8" else 1.0
+    if cfg.fmt is None:
+        return jnp.clip(s, 0, clip_at), ((s > 0) & (s < clip_at)).astype(s.dtype)
+    return fxp.relu_clipped(s, cfg.fmt, clip_at)
+
+
+def ff_junction(jp: Params, a_prev, cfg: PaperNetConfig, i: int, tables):
+    """eq. (1): s_j = sum_f w[j,f] * a_prev[idx[j,f]] + b_j  (clipping tree),
+    returns (a, a_dot, s)."""
+    fmt = cfg.fmt
+    gathered = jnp.take(a_prev, jp["idx"], axis=-1)          # [..., N_out, d_in]
+    prod = _q(jp["w"] * gathered, fmt)
+    if fmt is None:
+        s = jnp.sum(prod, axis=-1) + jp["b"]
+    else:
+        s = fxp.q_add(fxp.tree_sum_clipped(prod, fmt), jp["b"], fmt)
+    a, adot = _act(s, cfg, tables)
+    return a, adot, s
+
+
+def forward(params: Params, x, cfg: PaperNetConfig, tables=None):
+    """Full FF pass.  x [..., N_0] -> activations list [a_0 .. a_L]."""
+    tables = tables or (fxp.sigmoid_tables(cfg.fmt) if cfg.fmt else None)
+    acts, adots = [x], [None]
+    a = x
+    for i, jp in enumerate(params["junctions"]):
+        a, adot, _ = ff_junction(jp, a, cfg, i, tables)
+        acts.append(a)
+        adots.append(adot)
+    return acts, adots
+
+
+def bp_junction(jp: Params, delta_next, adot, cfg: PaperNetConfig):
+    """eq. (2b): delta_i[k] = adot[k] * sum over the d_out edges of w*delta."""
+    fmt = cfg.fmt
+    w_rev = jnp.take_along_axis(
+        jnp.take(jp["w"], jp["rev_j"], axis=0),               # [N_in, d_out, d_in]
+        jp["rev_f"][..., None], axis=-1)[..., 0]              # [N_in, d_out]
+    d_rev = jnp.take(delta_next, jp["rev_j"], axis=-1)        # [..., N_in, d_out]
+    prod = _q(w_rev * d_rev, fmt)
+    if fmt is None:
+        s = jnp.sum(prod, axis=-1)
+    else:
+        s = fxp.tree_sum_clipped(prod, fmt)
+    return _q(adot * s, fmt)
+
+
+def up_junction(jp: Params, a_prev, delta, eta, cfg: PaperNetConfig) -> Params:
+    """eq. (3): w -= eta * a_prev[idx] * delta ; b -= eta * delta.
+    eta is a power of two, so eta*x is exact on the grid (a bit shift)."""
+    fmt = cfg.fmt
+    gathered = jnp.take(a_prev, jp["idx"], axis=-1)
+    gw = _q(gathered * delta[..., None], fmt)
+    if gw.ndim > jp["w"].ndim:                   # mini-batch: average grads
+        gw = gw.mean(axis=tuple(range(gw.ndim - jp["w"].ndim)))
+        gd = delta.mean(axis=tuple(range(delta.ndim - jp["b"].ndim)))
+    else:
+        gd = delta
+    new_w = _q(jp["w"] - eta * gw, fmt)
+    new_b = _q(jp["b"] - eta * gd, fmt)
+    return dict(jp, w=new_w, b=new_b)
+
+
+def output_delta(a_out, y, cfg: PaperNetConfig):
+    """eq. (2a): cross-entropy + sigmoid -> delta_L = a_L - y."""
+    return _q(a_out - y, cfg.fmt)
+
+
+# ------------------------------------------------------------------ training
+def sgd_step(params: Params, x, y, eta, cfg: PaperNetConfig, tables=None):
+    """One sequential FF -> BP -> UP pass (the non-pipelined reference)."""
+    acts, adots = forward(params, x, cfg, tables)
+    L = cfg.n_junctions
+    deltas = [None] * (L + 1)
+    deltas[L] = output_delta(acts[L], y, cfg)
+    for i in range(L - 1, 0, -1):
+        deltas[i] = bp_junction(params["junctions"][i], deltas[i + 1],
+                                adots[i], cfg)
+    new_j = [up_junction(params["junctions"][i], acts[i], deltas[i + 1], eta, cfg)
+             for i in range(L)]
+    loss = -jnp.mean(y * jnp.log(jnp.clip(acts[L], 1e-7, 1.0))
+                     + (1 - y) * jnp.log(jnp.clip(1 - acts[L], 1e-7, 1.0)))
+    return {"junctions": new_j}, loss, acts[L]
+
+
+def train_epoch(params: Params, xs, ys, eta, cfg: PaperNetConfig):
+    """Online SGD over an epoch, jit-compiled as one scan."""
+    tables = fxp.sigmoid_tables(cfg.fmt) if cfg.fmt else None
+
+    def step(p, xy):
+        x, y = xy
+        p2, loss, out = sgd_step(p, x, y, eta, cfg, tables)
+        correct = (jnp.argmax(out, -1) == jnp.argmax(y, -1)).astype(jnp.float32)
+        return p2, (loss, correct)
+
+    params, (losses, corrects) = jax.lax.scan(step, params, (xs, ys))
+    return params, losses, corrects
+
+
+def train_epoch_pipelined(params: Params, xs, ys, eta, cfg: PaperNetConfig):
+    """Junction-pipelined training for the paper's L=2 network (Fig. 1).
+
+    Clock t (all ops read start-of-clock state; updates land at clock end):
+      J1.FF(t)    J2.FF(t-1)+cost    J2.BP(t-2)    J2.UP(t-2)    J1.UP(t-3)
+    Weight staleness exactly matches the FPGA schedule; accuracy parity with
+    ``train_epoch`` is the paper's implicit claim (validated in
+    benchmarks/pipeline_parity.py)."""
+    assert cfg.n_junctions == 2, "clocked schedule is specialized to L=2"
+    tables = fxp.sigmoid_tables(cfg.fmt) if cfg.fmt else None
+    N0, N1, N2 = cfg.layers
+    n = xs.shape[0]
+    zf = lambda *s: jnp.zeros(s, xs.dtype)
+    # FIFO slots for inputs in flight (t, t-1, t-2, t-3)
+    fifo0 = {"a0": zf(4, N0), "y": zf(4, N2)}
+    fifo1 = {"a1": zf(3, N1), "adot1": zf(3, N1)}      # produced by J1.FF
+    fifo2 = {"delta2": zf(1, N2)}                      # produced by J2 cost
+    fifo_d1 = {"delta1": zf(1, N1)}                    # produced by J2.BP
+
+    def clock(carry, xy):
+        p, f0, f1, f2, fd1, stats = carry
+        x, y = xy
+        j1, j2 = p["junctions"]
+        # shift input fifo
+        a0s = jnp.roll(f0["a0"], 1, axis=0).at[0].set(x)
+        ys_ = jnp.roll(f0["y"], 1, axis=0).at[0].set(y)
+        # J1.FF on input t
+        a1_t, adot1_t, _ = ff_junction(j1, x, cfg, 0, tables)
+        # J2.FF + cost on input t-1
+        a2_tm1, _, _ = ff_junction(j2, f1["a1"][0], cfg, 1, tables)
+        delta2_tm1 = output_delta(a2_tm1, ys_[1], cfg)
+        # J2.BP on input t-2 (uses delta2 computed last clock)
+        delta1_tm2 = bp_junction(j2, f2["delta2"][0], f1["adot1"][1], cfg)
+        # J2.UP on input t-2
+        j2_new = up_junction(j2, f1["a1"][1], f2["delta2"][0], eta, cfg)
+        # J1.UP on input t-3 (uses delta1 computed last clock)
+        j1_new = up_junction(j1, a0s[3], fd1["delta1"][0], eta, cfg)
+        # advance fifos
+        f1n = {"a1": jnp.roll(f1["a1"], 1, 0).at[0].set(a1_t),
+               "adot1": jnp.roll(f1["adot1"], 1, 0).at[0].set(adot1_t)}
+        f2n = {"delta2": f2["delta2"].at[0].set(delta2_tm1)}
+        fd1n = {"delta1": fd1["delta1"].at[0].set(delta1_tm2)}
+        correct = (jnp.argmax(a2_tm1, -1) == jnp.argmax(ys_[1], -1)).astype(jnp.float32)
+        return ({"junctions": [j1_new, j2_new]},
+                {"a0": a0s, "y": ys_}, f1n, f2n, fd1n, stats), correct
+
+    carry = (params, fifo0, fifo1, fifo2, fifo_d1, 0.0)
+    (params, *_), corrects = jax.lax.scan(clock, carry, (xs, ys))
+    return params, corrects

@@ -1,0 +1,134 @@
+"""Pre-defined-sparse linear layer — the paper's junction as a JAX module.
+
+Storage follows the paper's edge-centric layout: weights live as dense
+(block, block) tiles indexed by a static block pattern (core/sparsity.py),
+exactly like the FPGA's z-wide weight memories indexed through the
+interleaver.  Three apply paths:
+
+* ``apply_jnp``      — gather + einsum, pure jnp.  Used for lowering/dry-run
+                       (correct FLOP accounting) and CPU tests.
+* ``apply_kernel``   — Pallas ``block_sparse_matmul`` (kernels/), TPU target.
+* dense fallback     — when a SparsityConfig does not apply (density 1.0,
+                       dims not tileable), an ordinary dense matmul.
+
+The neuron-level interleaver composes with the block pattern as a static
+permutation — on TPU a layout choice, not a runtime cost (XLA folds static
+gathers into the producing op); the bit-faithful neuron-level path lives in
+core/paper_net.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import BlockPattern, SparsityConfig, make_block_pattern
+
+Params = dict[str, Any]
+
+
+def is_sparse(params: Params) -> bool:
+    return "idx" in params
+
+
+def init_dense(key, n_in: int, n_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> Params:
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(n_in))
+    p: Params = {"w": jax.random.normal(key, (n_in, n_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((n_out,), dtype)
+    return p
+
+
+def init_sparse(key, n_in: int, n_out: int, sp: SparsityConfig, *,
+                bias: bool = False, dtype=jnp.float32,
+                seed: int = 0) -> Params:
+    """Glorot-normal init over the *kept* edges (paper Sec. III-C-1: variance
+    2/(d_out + d_in) over actual degrees, not the dense widths)."""
+    pat = make_block_pattern(n_in, n_out, sp.density, sp.block, seed=seed)
+    d_in = pat.fan_in_blocks * pat.block          # actual in-degree per neuron
+    d_out = pat.fan_out_blocks * pat.block
+    scale = float(np.sqrt(2.0 / (d_in + d_out)))
+    shape = (pat.n_out_blocks, pat.fan_in_blocks, pat.block, pat.block)
+    p: Params = {
+        "w": jax.random.normal(key, shape, dtype) * scale,
+        "idx": jnp.asarray(pat.idx),              # static, non-trainable
+        "rev_ob": jnp.asarray(pat.rev_ob),
+        "rev_t": jnp.asarray(pat.rev_t),
+        "rev_cnt": jnp.asarray(pat.rev_cnt),
+    }
+    if bias:
+        p["b"] = jnp.zeros((n_out,), dtype)
+    return p
+
+
+def init_linear(key, n_in: int, n_out: int, *, family: str,
+                sp: SparsityConfig | None, bias: bool = False,
+                dtype=jnp.float32, seed: int = 0) -> Params:
+    """Dense unless the paper's technique applies and the dims tile."""
+    if (sp is not None and sp.applies_to(family)
+            and n_in % sp.block == 0 and n_out % sp.block == 0
+            and n_in // sp.block >= 2):
+        return init_sparse(key, n_in, n_out, sp, bias=bias, dtype=dtype, seed=seed)
+    return init_dense(key, n_in, n_out, bias=bias, dtype=dtype)
+
+
+def apply_jnp(params: Params, x: jax.Array) -> jax.Array:
+    """y[..., n_out] — per fan-in slot: gather one input block per output
+    block, rank-bs matmul, accumulate.
+
+    FLOPs = 2 * M * n_out * (fan_in_blocks * block) — density-scaled, which
+    is what the roofline accounting must see.  Looping over the (small)
+    fan-in keeps peak memory at O(n_out) per step — gathering all slots at
+    once materializes a fan_in_blocks-times-larger tensor (29x d_model for
+    qwen2's FFN; §Perf iteration S1).
+    """
+    w = params["w"]                                  # [nob, kb, bs, bs]
+    idx = params["idx"]                              # [nob, kb]
+    nob, kb, bs, _ = w.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, -1, bs)                    # [..., nib, bs]
+    wc = w.astype(x.dtype)
+    y = None
+    for k in range(kb):                              # kb is small and static
+        xk = jnp.take(xb, idx[:, k], axis=-2)        # [..., nob, bs]
+        part = jnp.einsum("...ob,obc->...oc", xk, wc[:, k])
+        y = part if y is None else y + part
+    y = y.reshape(*lead, nob * bs)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def apply_dense(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def apply(params: Params, x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+    if not is_sparse(params):
+        return apply_dense(params, x)
+    if use_kernel:
+        from repro.kernels import ops  # local import: kernels optional at runtime
+        return ops.block_sparse_matmul(
+            x, params["w"], params["idx"], params["rev_ob"], params["rev_t"],
+            params["rev_cnt"], bias=params.get("b"))
+    return apply_jnp(params, x)
+
+
+def density(params: Params) -> float:
+    if not is_sparse(params):
+        return 1.0
+    w = params["w"]
+    nob, kb, bs, _ = w.shape
+    idx = params["idx"]
+    n_in_blocks = int(jnp.max(idx)) + 1 if hasattr(idx, "max") else idx.max() + 1
+    return kb / n_in_blocks
+
+
+def n_weights(params: Params) -> int:
+    return int(np.prod(params["w"].shape))

@@ -1,0 +1,168 @@
+"""Pre-defined structured sparsity (paper Sec. II-A).
+
+A junction between layers of widths (n_in, n_out) carries
+``W = n_in * d_out = n_out * d_in`` weights with *fixed* in/out degrees —
+fixed before training, never discovered or pruned.  Density = W/(n_in*n_out).
+
+Two granularities:
+
+* **neuron-level** (`NeuronPattern`) — the paper's exact scheme: each output
+  neuron reads ``d_in`` permuted input neurons through a clash-free
+  interleaver.  This is the bit-faithful reference used by the MNIST repro.
+* **block-level** (`BlockPattern`) — the TPU-native scheme: fan-in/out fixed
+  at MXU-tile granularity (default 128), so each edge-bundle is a dense
+  (bs x bs) matmul.  A neuron-level interleaver is composed *inside* blocks
+  as a static permutation (cheap gather, fused by XLA); clash-freedom across
+  banks becomes grid-step load balance (see DESIGN.md Sec. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import interleaver as il
+
+__all__ = ["SparsityConfig", "NeuronPattern", "BlockPattern", "make_block_pattern", "make_neuron_pattern"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """How the paper's technique is applied inside a model.
+
+    density: fraction of block connections kept (1.0 = dense layer).
+    block: MXU tile edge (128 aligns with the systolic array).
+    where: which linear families to sparsify ("ffn", "attn", "all").
+    """
+
+    density: float = 0.125
+    block: int = 128
+    where: str = "ffn"
+    seed: int = 0
+
+    def applies_to(self, family: str) -> bool:
+        if self.density >= 1.0:
+            return False
+        return self.where == "all" or family in self.where.split("+")
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronPattern:
+    """Paper-exact junction pattern: idx[n_out, d_in] input neuron per edge."""
+
+    n_in: int
+    n_out: int
+    d_in: int
+    idx: np.ndarray  # [n_out, d_in] int32
+
+    @property
+    def d_out(self) -> int:
+        return self.n_out * self.d_in // self.n_in
+
+    @property
+    def n_weights(self) -> int:
+        return self.n_out * self.d_in
+
+    @property
+    def density(self) -> float:
+        return self.n_weights / (self.n_in * self.n_out)
+
+
+def make_neuron_pattern(n_in: int, n_out: int, d_in: int, z: int | None = None,
+                        seed: int = 0) -> NeuronPattern:
+    """Build the paper's junction: weights numbered sequentially on the right
+    (Sec. III-D-3), traced to left neurons through a clash-free interleaver.
+
+    Weight k (k = j*d_in + f for right neuron j, edge f) connects left neuron
+    pi(k) // d_out ... the paper's memory layout maps pi(k) to a (bank, row);
+    we map pi(k) onto left neurons round-robin so each left neuron gets
+    exactly d_out edges (fixed fan-out by construction).
+    """
+    W = n_out * d_in
+    if W % n_in:
+        raise ValueError("W must be divisible by n_in for integral fan-out")
+    d_out = W // n_in
+    z = z if z is not None else d_in
+    pi = il.sv_ss_interleaver(W, z, seed=seed)
+    # left neuron of permuted weight slot p: balanced round-robin p -> p % n_in
+    # composed with the permutation => every left neuron has exactly d_out edges.
+    left = (pi % n_in).astype(np.int32)
+    counts = np.bincount(left, minlength=n_in)
+    if not np.all(counts == d_out):
+        # repair: reassign surplus slots to deficit neurons deterministically
+        left = _balance_assignment(left, n_in, d_out)
+    idx = left.reshape(n_out, d_in)
+    # no duplicate input per output neuron (keeps eq. (1a) a true d_in-sum)
+    idx = il._rebalance_rows(idx.astype(np.int64), n_in).astype(np.int32)
+    return NeuronPattern(n_in=n_in, n_out=n_out, d_in=d_in, idx=idx)
+
+
+def _balance_assignment(left: np.ndarray, n_in: int, d_out: int) -> np.ndarray:
+    left = left.astype(np.int64).copy()
+    counts = np.bincount(left, minlength=n_in)
+    surplus = [n for n in range(n_in) for _ in range(max(0, counts[n] - d_out))]
+    deficit = [n for n in range(n_in) for _ in range(max(0, d_out - counts[n]))]
+    s_pos = {}
+    for i, v in enumerate(left):
+        s_pos.setdefault(int(v), []).append(i)
+    di = 0
+    for n in surplus:
+        pos = s_pos[n].pop()
+        left[pos] = deficit[di]
+        di += 1
+    return left.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPattern:
+    """TPU-native pattern: block idx[n_out_blocks, fan_in_blocks] (+ reverse)."""
+
+    n_in: int
+    n_out: int
+    block: int
+    idx: np.ndarray        # [nob, kb] int32 — input block per slot
+    rev_ob: np.ndarray     # [nib, fb] int32 — output block reading input block
+    rev_t: np.ndarray      # [nib, fb] int32 — slot within that output block
+    rev_cnt: np.ndarray    # [nib] int32 — valid reverse slots (ragged patterns)
+
+    @property
+    def n_in_blocks(self) -> int:
+        return self.n_in // self.block
+
+    @property
+    def n_out_blocks(self) -> int:
+        return self.n_out // self.block
+
+    @property
+    def fan_in_blocks(self) -> int:
+        return int(self.idx.shape[1])
+
+    @property
+    def fan_out_blocks(self) -> int:
+        return int(self.rev_ob.shape[1])
+
+    @property
+    def density(self) -> float:
+        return self.fan_in_blocks / self.n_in_blocks
+
+    @property
+    def n_weights(self) -> int:
+        return self.n_out_blocks * self.fan_in_blocks * self.block * self.block
+
+
+def make_block_pattern(n_in: int, n_out: int, density: float, block: int = 128,
+                       seed: int = 0) -> BlockPattern:
+    """Choose fan_in_blocks ~= density * n_in_blocks.  When the paper's
+    divisibility identity (integral fan-out) holds at that kb it is exact;
+    otherwise fan-out is balanced to +-1 and the reverse pattern is masked
+    (forcing exactness would quantize density to multiples of
+    nib/gcd(nob, nib) — full density for coprime dims like qwen2's FFN)."""
+    if n_in % block or n_out % block:
+        raise ValueError(f"dims ({n_in},{n_out}) must be multiples of block={block}")
+    nib, nob = n_in // block, n_out // block
+    kb = min(nib, max(1, round(density * nib)))
+    idx = il.block_circulant_pattern(nib, nob, kb, seed=seed)
+    rev_ob, rev_t, rev_cnt = il.reverse_block_pattern(idx, nib)
+    return BlockPattern(n_in=n_in, n_out=n_out, block=block, idx=idx,
+                        rev_ob=rev_ob, rev_t=rev_t, rev_cnt=rev_cnt)

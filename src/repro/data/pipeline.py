@@ -1,0 +1,74 @@
+"""Deterministic, restartable data pipeline.
+
+The FPGA streams inputs over UART because they don't fit on-chip
+(Sec. III-D-4); the cluster-scale analogue is a host pipeline feeding
+sharded device batches.  Key property for fault tolerance: the iterator is
+a pure function of (seed, step) — checkpoints store just two integers and
+restart resumes bit-identically (tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass
+class LMTokenPipeline:
+    """Synthetic language-model token stream (markov-ish structure so the
+    loss actually falls).  State = (seed, step)."""
+    cfg: ArchConfig
+    batch_size: int
+    seq_len: int
+    seed: int = 0
+    step: int = 0
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    @classmethod
+    def from_state(cls, cfg, batch_size, seq_len, state):
+        return cls(cfg, batch_size, seq_len, seed=state["seed"],
+                   step=state["step"])
+
+    def _make(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        V = self.cfg.raw_vocab or self.cfg.vocab
+        B, S = self.batch_size, self.seq_len
+        # structured stream: blocks of arithmetic token runs + noise — gives
+        # next-token structure a model can learn quickly
+        base = rng.integers(0, V - S - 2, size=(B, 1))
+        runs = base + np.arange(S)[None, :]
+        noise = rng.integers(0, V, size=(B, S))
+        mask = rng.random((B, S)) < 0.15
+        tokens = np.where(mask, noise, runs % V).astype(np.int32)
+        batch = {"tokens": tokens}
+        if self.cfg.family == "vlm":
+            P = min(self.cfg.num_patches, S // 2)
+            batch["patches"] = rng.standard_normal(
+                (B, P, self.cfg.d_model)).astype(np.float32)
+            batch["tokens"] = tokens[:, : S - P]
+        if self.cfg.family == "audio":
+            batch["frames"] = rng.standard_normal(
+                (B, self.cfg.enc_frames, self.cfg.d_model)).astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = self._make(self.step)
+        self.step += 1
+        return b
+
+
+def device_put_batch(batch: dict, shardings=None):
+    if shardings is None:
+        return jax.tree.map(jnp.asarray, batch)
+    return jax.tree.map(
+        lambda t, s: jax.device_put(jnp.asarray(t), s), batch, shardings)

@@ -1,0 +1,155 @@
+"""Pallas TPU kernels for pre-defined block-sparse matmul — the paper's
+edge processing on the MXU.
+
+The FPGA processes z edges/cycle against z clash-free memory banks; here
+one grid step processes one (128 x 128) edge-bundle as a dense MXU matmul,
+and the clash-freedom property becomes the balanced block pattern: every
+output tile has exactly ``kb`` bundles (fixed fan-in) and every input tile
+feeds exactly ``fb`` bundles (fixed fan-out), so *every grid step does
+identical work* — no load imbalance, no indirection stalls.
+
+The block index arrays ride in as scalar-prefetch operands so the x/w
+BlockSpec index_maps can depend on them (the TPU DMA engine resolves the
+gather at tile granularity — the paper's interleaver in BlockSpec form).
+
+Grids iterate the reduction dim innermost and accumulate into the output
+block (revisiting), the canonical Pallas TPU pattern.  VMEM per step:
+3 tiles of (bm x 128) + (128 x 128) — bounded and hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+
+
+# ------------------------------------------------------------------ forward
+def _fwd_kernel(idx_ref, x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+    part = jnp.dot(x_ref[...], w_ref[0, 0],
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+def fwd(x, w, idx, *, bm: int = DEFAULT_BM, interpret: bool = False):
+    """x [M, nib*bs], w [nob, kb, bs, bs], idx [nob, kb] -> [M, nob*bs]."""
+    M = x.shape[0]
+    nob, kb, bs, _ = w.shape
+    assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
+    grid = (M // bm, nob, kb)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bs), lambda m, o, k, idx: (m, idx[o, k])),
+                pl.BlockSpec((1, 1, bs, bs), lambda m, o, k, idx: (o, k, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bs), lambda m, o, k, idx: (m, o)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, nob * bs), x.dtype),
+        interpret=interpret,
+    )(idx, x, w)
+
+
+# ------------------------------------------------------------------ dx
+def _dx_kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, dy_ref, w_ref, o_ref):
+    i = pl.program_id(1)
+    f = pl.program_id(2)
+    # dy block [bm, bs] @ w[ob, t]^T ; padded reverse slots (ragged fan-out)
+    # contribute zero via the valid-count mask
+    valid = (f < rev_cnt_ref[i]).astype(jnp.float32)
+    part = jnp.dot(dy_ref[...], w_ref[0, 0].T,
+                   preferred_element_type=jnp.float32) * valid
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(f != 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+def dx(dy, w, rev_ob, rev_t, rev_cnt, *, bm: int = DEFAULT_BM,
+       interpret: bool = False):
+    """dy [M, nob*bs] -> dx [M, nib*bs] via the reverse (fan-out) pattern —
+    balanced by construction (to +-1 for ragged densities), so the backward
+    grid is as regular as the forward (the paper's equal-contribution
+    invariant, eq. (2b))."""
+    M = dy.shape[0]
+    nib, fb = rev_ob.shape
+    nob, kb, bs, _ = w.shape
+    assert M % bm == 0
+    grid = (M // bm, nib, fb)
+    return pl.pallas_call(
+        _dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bs),
+                             lambda m, i, f, rob, rt, rc: (m, rob[i, f])),
+                pl.BlockSpec((1, 1, bs, bs),
+                             lambda m, i, f, rob, rt, rc: (rob[i, f], rt[i, f], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bs),
+                                   lambda m, i, f, rob, rt, rc: (m, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, nib * bs), dy.dtype),
+        interpret=interpret,
+    )(rev_ob, rev_t, rev_cnt, dy, w)
+
+
+# ------------------------------------------------------------------ dw
+def _dw_kernel(idx_ref, x_ref, dy_ref, o_ref):
+    m = pl.program_id(2)
+    part = jnp.dot(x_ref[...].T, dy_ref[...],
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = part[None, None].astype(o_ref.dtype)
+
+    @pl.when(m != 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32)
+                      + part[None, None]).astype(o_ref.dtype)
+
+
+def dw(x, dy, idx, *, bm: int = DEFAULT_BM, interpret: bool = False):
+    """dw [nob, kb, bs, bs] — reduction over M tiles innermost."""
+    M = x.shape[0]
+    nob, kb = idx.shape
+    bs = dy.shape[1] // nob
+    assert M % bm == 0
+    grid = (nob, kb, M // bm)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bs), lambda o, k, m, idx: (m, idx[o, k])),
+                pl.BlockSpec((bm, bs), lambda o, k, m, idx: (m, o)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bs, bs),
+                                   lambda o, k, m, idx: (o, k, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nob, kb, bs, bs), jnp.float32),
+        interpret=interpret,
+    )(idx, x, dy)

@@ -1,0 +1,91 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``block_sparse_matmul`` carries a custom_vjp wired to the dx/dw kernels —
+the full paper pipeline (FF eq. (1), BP eq. (2), UP gradient of eq. (3))
+runs through Pallas.  Kernels execute in interpret mode off-TPU (the
+container is CPU-only); on TPU set ``interpret=False`` (the default
+auto-detects the backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_sparse_matmul as bsm
+from repro.kernels import fxp_qmatmul as fxpk
+from repro.kernels import sigmoid_lut as slut
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, bm):
+    M = x.shape[0]
+    pad = (-M) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, M
+
+
+# ------------------------------------------------------------ block sparse
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _bsm_core(x, w, idx, rev_ob, rev_t, rev_cnt, interpret):
+    return bsm.fwd(x, w, idx, interpret=interpret)
+
+
+def _bsm_fwd(x, w, idx, rev_ob, rev_t, rev_cnt, interpret):
+    y = bsm.fwd(x, w, idx, interpret=interpret)
+    return y, (x, w, idx, rev_ob, rev_t, rev_cnt)
+
+
+def _bsm_bwd(interpret, res, dy):
+    x, w, idx, rev_ob, rev_t, rev_cnt = res
+    dxv = bsm.dx(dy, w, rev_ob, rev_t, rev_cnt, interpret=interpret)
+    dwv = bsm.dw(x, dy, idx, interpret=interpret).astype(w.dtype)
+    return dxv, dwv, None, None, None, None
+
+
+_bsm_core.defvjp(_bsm_fwd, _bsm_bwd)
+
+
+def block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,
+                        interpret: bool | None = None):
+    """x [..., n_in] -> [..., n_out] through the pre-defined block pattern."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2, M = _pad_rows(x.reshape(-1, x.shape[-1]), bsm.DEFAULT_BM)
+    y = _bsm_core(x2, w.astype(x.dtype), idx, rev_ob, rev_t, rev_cnt, interpret)
+    y = y[:M].reshape(*lead, -1)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------ fixed point
+def fxp_qmatmul(a_code, w_code, *, bf: int, bn: int,
+                interpret: bool | None = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    a2, M = _pad_rows(a_code, 128)
+    K = a2.shape[1]
+    pad_k = (-K) % 128
+    if pad_k:
+        a2 = jnp.pad(a2, ((0, 0), (0, pad_k)))
+        w_code = jnp.pad(w_code, ((0, pad_k), (0, 0)))
+    N = w_code.shape[1]
+    pad_n = (-N) % 128
+    if pad_n:
+        w_code = jnp.pad(w_code, ((0, 0), (0, pad_n)))
+    y = fxpk.qmatmul(a2, w_code, bf=bf, bn=bn, interpret=interpret)
+    return y[:M, :N]
+
+
+# ------------------------------------------------------------ LUT sigmoid
+def sigmoid_lut(codes, table, interpret: bool | None = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    lead = codes.shape[:-1]
+    c2, M = _pad_rows(codes.reshape(-1, codes.shape[-1]), 256)
+    y = slut.lut_lookup(c2, table, interpret=interpret)
+    return y[:M].reshape(*lead, codes.shape[-1])

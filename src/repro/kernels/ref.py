@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------- block-sparse
+def block_sparse_matmul(x, w, idx):
+    """x [M, nib*bs]; w [nob, kb, bs, bs]; idx [nob, kb] -> y [M, nob*bs]."""
+    nob, kb, bs, _ = w.shape
+    M = x.shape[0]
+    xb = x.reshape(M, -1, bs)
+    xg = jnp.take(xb, idx.reshape(-1), axis=1).reshape(M, nob, kb, bs)
+    y = jnp.einsum("mokb,okbc->moc", xg, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.reshape(M, nob * bs).astype(x.dtype)
+
+
+def block_sparse_dx(dy, w, idx, n_in_blocks):
+    """dy [M, nob*bs] -> dx [M, nib*bs] (scatter-add through the pattern)."""
+    nob, kb, bs, _ = w.shape
+    M = dy.shape[0]
+    dyb = dy.reshape(M, nob, bs)
+    # contributions per (ob, t): dy[:, ob] @ w[ob, t].T into block idx[ob, t]
+    contrib = jnp.einsum("mob,okbc->mokb" if False else "moc,okbc->mokb",
+                         dyb, w.astype(dy.dtype),
+                         preferred_element_type=jnp.float32)  # [M,nob,kb,bs]
+    dx = jnp.zeros((M, n_in_blocks, bs), jnp.float32)
+    dx = dx.at[:, idx.reshape(-1)].add(
+        contrib.reshape(M, nob * kb, bs))
+    return dx.reshape(M, n_in_blocks * bs).astype(dy.dtype)
+
+
+def block_sparse_dw(x, dy, idx):
+    """dw [nob, kb, bs, bs] = x_block^T @ dy_block per kept edge-bundle."""
+    nob, kb = idx.shape
+    M = x.shape[0]
+    bs = dy.shape[1] // nob
+    xb = x.reshape(M, -1, bs)
+    dyb = dy.reshape(M, nob, bs)
+    xg = jnp.take(xb, idx.reshape(-1), axis=1).reshape(M, nob, kb, bs)
+    return jnp.einsum("mokb,moc->okbc", xg, dyb,
+                      preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------- fixed point
+def fxp_qmatmul(a_code, w_code, bf: int, bn: int):
+    """Integer fixed-point matmul: int32 accumulate, round-half-up shift by
+    bf, saturate to the (bw=bn+bf+1) two's-complement range."""
+    acc = jnp.dot(a_code.astype(jnp.int32), w_code.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    rounded = (acc + (1 << (bf - 1))) >> bf
+    lo, hi = -(1 << (bn + bf)), (1 << (bn + bf)) - 1
+    return jnp.clip(rounded, lo, hi).astype(jnp.int32)
+
+
+# ----------------------------------------------------------- LUT sigmoid
+def sigmoid_lut(codes, table):
+    """codes int32 in [0, len(table)) -> table[codes]."""
+    return jnp.take(table, codes, axis=0)
+
+
+# ----------------------------------------------------------- selective scan
+def selective_scan(dt, x, bc, cc, a, h0):
+    """Sequential oracle for the fused Mamba-1 scan kernel."""
+    def step(h, args):
+        dt_t, x_t, b_t, c_t = args                    # [B,di],[B,di],[B,N],[B,N]
+        decay = jnp.exp(dt_t[..., None] * a[None])    # [B,di,N]
+        inp = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = decay * h + inp
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+    sw = lambda t: jnp.swapaxes(t, 0, 1)
+    h, ys = jax.lax.scan(step, h0, (sw(dt), sw(x), sw(bc), sw(cc)))
+    return sw(ys), h

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the batch pytree for train/prefill; the
+modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, llava gets patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract train/prefill batch."""
+    B, L = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.family == "vlm":
+        npatch = min(cfg.num_patches, L // 2)
+        batch["patches"] = S((B, npatch, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = S((B, L - npatch), jnp.int32)
+    else:
+        batch["tokens"] = S((B, L), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = S((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_inputs_struct(cfg: ArchConfig, shape: ShapeSpec):
+    B = shape.global_batch
+    return S((B, 1), jnp.int32), S((), jnp.int32)   # token, pos
+
+
+def concrete_batch(cfg: ArchConfig, batch_size: int, seq_len: int, key):
+    """Small concrete batch (smoke tests / examples)."""
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.family == "vlm":
+        npatch = min(cfg.num_patches, seq_len // 2)
+        batch["patches"] = jax.random.normal(ks[1], (batch_size, npatch, cfg.d_model),
+                                             jnp.float32)
+        batch["tokens"] = jax.random.randint(ks[0], (batch_size, seq_len - npatch),
+                                             0, cfg.raw_vocab or cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (batch_size, seq_len),
+                                             0, cfg.raw_vocab or cfg.vocab)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(ks[2], (batch_size, cfg.enc_frames,
+                                                    cfg.d_model), jnp.float32)
+    return batch

@@ -1,0 +1,276 @@
+"""Attention: GQA / MLA / sliding-window, train+prefill+decode paths.
+
+Memory discipline: full-sequence attention is computed with an
+online-softmax scan over KV chunks (flash-attention semantics in plain
+lax.scan — the Pallas kernel in kernels/flash_attention.py is the TPU
+drop-in).  Decode attends over the whole cache with masked softmax; with
+the cache sequence dimension sharded over the "model" mesh axis the XLA
+SPMD partitioner turns the softmax/contraction reductions into tiny
+all-reduces — flash-decoding for free (DESIGN.md Sec. 5).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import sparse_linear as sl
+from repro.models.layers import norm_apply, norm_init, rope
+
+NEG_INF = -1e30
+Params = dict[str, Any]
+
+
+# =============================================================== init
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32, cross: bool = False,
+              seed: int = 0) -> Params:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    sp = cfg.sparsity
+    ks = jax.random.split(key, 6)
+    if cfg.attn_kind == "mla" and not cross:
+        m = cfg.mla
+        qd = H * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+        p: Params = {
+            "wq": sl.init_linear(ks[0], d, qd, family="attn", sp=sp, dtype=dtype, seed=seed),
+            "wkv_a": sl.init_dense(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dtype),
+            "kv_norm": norm_init(m.kv_lora_rank, "rmsnorm", dtype),
+            "wkv_b": sl.init_dense(ks[2], m.kv_lora_rank,
+                                   H * (m.qk_nope_head_dim + m.v_head_dim), dtype=dtype),
+            "wo": sl.init_linear(ks[3], H * m.v_head_dim, d, family="attn", sp=sp,
+                                 dtype=dtype, seed=seed + 1),
+        }
+        return p
+    p = {
+        "wq": sl.init_linear(ks[0], d, H * hd, family="attn", sp=sp,
+                             bias=cfg.qkv_bias, dtype=dtype, seed=seed),
+        "wk": sl.init_dense(ks[1], d, Hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": sl.init_dense(ks[2], d, Hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": sl.init_linear(ks[3], H * hd, d, family="attn", sp=sp,
+                             dtype=dtype, seed=seed + 1),
+    }
+    return p
+
+
+# =============================================================== core math
+def _split_heads(x, n_heads, hd):
+    return x.reshape(*x.shape[:-1], n_heads, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 1024, q_pos=None, kv_pos=None):
+    """Online-softmax attention.  q [B,Sq,H,D]; k,v [B,Sk,Hkv,D].
+
+    Scans KV chunks carrying (running max, normalizer, weighted acc) in fp32
+    — numerically identical to monolithic softmax, O(Sq*chunk) live memory.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+    chunk = min(chunk, Sk)
+    if Sk % chunk:  # pad KV to a chunk multiple; padding masked below
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nck = k.shape[1] // chunk
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if kv_pos is None:
+        kv_pos = jnp.arange(Sk)
+    kv_pos = jnp.pad(kv_pos, (0, k.shape[1] - Sk), constant_values=Sk + 10**9)
+
+    q5 = q.reshape(B, Sq, Hkv, rep, D)
+    kc = k.reshape(B, nck, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nck, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(nck, chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kj, vj, pj = inp
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", q5, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = pj[None, None, None, None, :] <= Sk + 10**8  # padding mask
+        if causal:
+            mask = mask & (q_pos[None, None, None, :, None]
+                           >= pj[None, None, None, None, :])
+        if window:
+            mask = mask & (q_pos[None, None, None, :, None]
+                           - pj[None, None, None, None, :] < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        upd = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(q.dtype), vj,
+                         preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, Sq, D), jnp.float32)
+    # recompute scores in the backward pass (flash-attention style): without
+    # this the scan stashes per-chunk [B,H,Sq,ck] score tensors for autodiff
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """q [B,1,H,D]; caches [B,S,Hkv,D]; pos: scalar current position.
+
+    With S sharded over the model axis this lowers to local partial
+    softmax + tiny all-reduces (flash-decoding).  For ring-buffer (sliding
+    window) caches S == window and every slot written so far is valid.
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+    q5 = q.reshape(B, 1, Hkv, rep, D)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q5, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(S)
+    if window:  # ring buffer: slots 0..min(pos, S-1) valid
+        valid = (idx <= pos) | (pos >= S)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bgrqk,bkgd->bgrqd", (p / l).astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# =============================================================== GQA paths
+def gqa_forward(p: Params, x, cfg: ArchConfig, *, positions, causal=True,
+                kv_override=None):
+    """Train/prefill/encoder self-attention (full sequence).
+
+    Returns (out, (k, v)) — k/v handed to the caller for cache building.
+    ``kv_override`` supplies encoder K/V for cross-attention.
+    """
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = _split_heads(sl.apply(p["wq"], x), H, hd)
+    if kv_override is None:
+        k = _split_heads(sl.apply(p["wk"], x), Hkv, hd)
+        v = _split_heads(sl.apply(p["wv"], x), Hkv, hd)
+        if cfg.family != "audio":  # whisper uses absolute positions, no rope
+            q = rope(q, positions, cfg.rope_theta, cfg.partial_rotary)
+            k = rope(k, positions, cfg.rope_theta, cfg.partial_rotary)
+    else:
+        k, v = kv_override
+        causal = False
+    window = cfg.window if cfg.attn_kind == "sliding" else 0
+    kv_pos = positions if kv_override is None else None
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            chunk=cfg.attn_chunk, q_pos=positions, kv_pos=kv_pos)
+    out = sl.apply(p["wo"], out.reshape(B, S, H * hd))
+    return out, (k, v)
+
+
+def gqa_decode(p: Params, x, cfg: ArchConfig, cache: dict, pos,
+               cross: bool = False):
+    """Single-token decode.  cache: {"k": [B,S,Hkv,hd], "v": ...}.
+
+    Sliding-window archs use a ring buffer (S == window, slot = pos % S).
+    Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = _split_heads(sl.apply(p["wq"], x), H, hd)
+    if not cross:
+        k_new = _split_heads(sl.apply(p["wk"], x), Hkv, hd)
+        v_new = _split_heads(sl.apply(p["wv"], x), Hkv, hd)
+        if cfg.family != "audio":
+            pos_arr = jnp.full((1,), pos)
+            q = rope(q, pos_arr, cfg.rope_theta, cfg.partial_rotary)
+            k_new = rope(k_new, pos_arr, cfg.rope_theta, cfg.partial_rotary)
+        S = cache["k"].shape[1]
+        sliding = cfg.attn_kind == "sliding"
+        slot = pos % S if sliding else pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+        out = decode_attention(q, k_cache, v_cache, pos, window=S if sliding else 0)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        # cross attention: every encoder slot valid, cache is read-only
+        S = cache["k"].shape[1]
+        out = decode_attention(q, cache["k"], cache["v"], jnp.asarray(S - 1))
+        new_cache = cache
+    out = sl.apply(p["wo"], out.reshape(B, 1, H * hd))
+    return out, new_cache
+
+
+# =============================================================== MLA paths
+def mla_forward(p: Params, x, cfg: ArchConfig, *, positions):
+    """DeepSeek-V2 multi-head latent attention, expanded form (train/prefill).
+
+    Returns (out, (latent, k_rope)) for the compressed cache."""
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.n_heads
+    nope, rd, vd, lora = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                          m.v_head_dim, m.kv_lora_rank)
+    q = _split_heads(sl.apply(p["wq"], x), H, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    a = sl.apply_dense(p["wkv_a"], x)                       # [B,S,lora+rd]
+    latent = norm_apply(p["kv_norm"], a[..., :lora], "rmsnorm", cfg.norm_eps)
+    k_rope = rope(a[..., lora:][:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rd]
+
+    kvb = sl.apply_dense(p["wkv_b"], latent)                # [B,S,H*(nope+vd)]
+    kvb = kvb.reshape(B, S, H, nope + vd)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], -1)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    # pad v to qk dim for the shared chunked kernel, slice after
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rd - vd)))
+    out = chunked_attention(qf, k, v_pad, causal=True, chunk=cfg.attn_chunk,
+                            q_pos=positions, kv_pos=positions)[..., :vd]
+    out = sl.apply(p["wo"], out.reshape(B, S, H * vd))
+    return out, (latent, k_rope[:, :, 0, :])
+
+
+def mla_decode(p: Params, x, cfg: ArchConfig, cache: dict, pos):
+    """Absorbed-form MLA decode: attention scored directly in latent space —
+    the cache is [B,S,lora] + [B,S,rd] (the paper-stated memory win)."""
+    B = x.shape[0]
+    m, H = cfg.mla, cfg.n_heads
+    nope, rd, vd, lora = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                          m.v_head_dim, m.kv_lora_rank)
+    q = _split_heads(sl.apply(p["wq"], x), H, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    pos_arr = jnp.full((1,), pos)
+    q_rope = rope(q_rope, pos_arr, cfg.rope_theta)
+
+    a = sl.apply_dense(p["wkv_a"], x)
+    lat_new = norm_apply(p["kv_norm"], a[..., :lora], "rmsnorm", cfg.norm_eps)
+    kr_new = rope(a[..., lora:][:, :, None, :], pos_arr, cfg.rope_theta)[:, :, 0, :]
+    lat = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], lat_new.astype(cache["latent"].dtype), pos, 1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, 1)
+
+    wkv_b = p["wkv_b"]["w"].reshape(lora, H, nope + vd).astype(x.dtype)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    # absorb W_UK into q: [B,1,H,lora]
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)
+    s = (jnp.einsum("bqhl,bsl->bhqs", q_abs, lat, preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr, preferred_element_type=jnp.float32))
+    s = s / np.sqrt(nope + rd)
+    valid = jnp.arange(lat.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", pr, lat)
+    out = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv)
+    out = sl.apply(p["wo"], out.reshape(B, 1, H * vd))
+    return out, {"latent": lat, "k_rope": kr}

@@ -1,0 +1,118 @@
+"""Common model pieces: norms, rotary embeddings, token embedding, MLP.
+
+Pure-functional: ``*_init(key, ...) -> params dict`` and ``*_apply``.
+Compute runs in ``cfg.dtype`` (bf16), parameters live in ``param_dtype``
+(fp32 master copies for the optimizer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_linear as sl
+from repro.configs.base import ArchConfig
+
+
+# ------------------------------------------------------------------ norms
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, kind: str, eps: float):
+    """f32 *accumulation* (reduction dtype), bf16 elementwise.
+
+    Materializing ``x.astype(f32)`` looks equivalent, but under scan+remat
+    XLA hoists that convert out of the backward loop, materializing an f32
+    image of the whole [L, B, S, D] saved-carry stack (10 GiB for qwen2
+    train — §Perf iteration C3).  Reduction-dtype accumulation keeps every
+    full-size tensor bf16."""
+    if kind == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+        var = ms - jnp.square(mu)
+        inv = jax.lax.rsqrt(var + eps)
+        y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+        y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+        inv = jax.lax.rsqrt(ms + eps)
+        y = x * inv.astype(x.dtype) * p["scale"].astype(x.dtype)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rotary
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         partial: float = 1.0) -> jax.Array:
+    """x [..., S, H, D]; positions [..., S] (broadcastable).  Rotates the
+    first ``partial * D`` dims (stablelm-style partial rotary)."""
+    d = x.shape[-1]
+    rot = int(d * partial)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)           # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out
+
+
+def sinusoidal_pos(seq: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ------------------------------------------------------------------ embed
+def embed_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    scale = float(1.0 / np.sqrt(cfg.d_model))
+    p = {"tok": jax.random.normal(key, (cfg.vocab, cfg.d_model), dtype) * scale}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["out"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab), dtype) * scale
+    if cfg.family == "audio":  # learned decoder positions (whisper)
+        k3 = jax.random.fold_in(key, 2)
+        p["pos"] = jax.random.normal(k3, (cfg.max_seq, cfg.d_model), dtype) * 0.02
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ArchConfig):
+    return jnp.take(p["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+
+
+def unembed(p, x, cfg: ArchConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_init(key, cfg: ArchConfig, d_ff: int | None = None, dtype=jnp.float32,
+             seed: int = 0):
+    """(Gated) MLP; projections become pre-defined-sparse when the paper's
+    technique is enabled for the 'ffn' family."""
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sp = cfg.sparsity
+    p = {"wi": sl.init_linear(ks[0], d, f, family="ffn", sp=sp, dtype=dtype, seed=seed),
+         "wo": sl.init_linear(ks[2], f, d, family="ffn", sp=sp, dtype=dtype, seed=seed + 1)}
+    if cfg.act == "silu":
+        p["wg"] = sl.init_linear(ks[1], d, f, family="ffn", sp=sp, dtype=dtype, seed=seed + 2)
+    return p
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    h = sl.apply(p["wi"], x)
+    if "wg" in p:
+        h = jax.nn.silu(sl.apply(p["wg"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return sl.apply(p["wo"], h)

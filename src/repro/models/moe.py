@@ -1,0 +1,134 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch.
+
+Tokens are processed in groups of ``group_size``; dispatch/combine tensors
+are [G, g, E, C] einsums, so with experts sharded over the "model" axis
+(EP) and groups over "data" the per-device footprint stays bounded and the
+expert matmuls are dense MXU work.  Dropped tokens (over capacity) fall
+through on the residual path — standard GShard semantics.
+
+Aux load-balance loss follows Switch/GShard: E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import sparse_linear as sl
+from repro.models.layers import mlp_apply, mlp_init
+
+Params = dict[str, Any]
+
+
+def _expert_sparse_ok(cfg: ArchConfig) -> bool:
+    sp = cfg.sparsity
+    return (sp is not None and sp.applies_to("ffn")
+            and cfg.d_model % sp.block == 0 and cfg.moe.d_expert % sp.block == 0
+            and cfg.d_model // sp.block >= 2 and cfg.moe.d_expert // sp.block >= 2)
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.float32, seed: int = 0) -> Params:
+    mo, d = cfg.moe, cfg.d_model
+    E, F = mo.num_experts, mo.d_expert
+    ks = jax.random.split(key, 7)
+    scale_in = float(1.0 / np.sqrt(d))
+    scale_out = float(1.0 / np.sqrt(F))
+    p: Params = {"router": jax.random.normal(ks[0], (d, E), dtype) * scale_in}
+    if _expert_sparse_ok(cfg):
+        # the paper's technique on the expert FFNs: one block pattern shared
+        # by all experts (same junction shape), per-expert weights
+        from repro.core.sparsity import make_block_pattern
+        sp = cfg.sparsity
+        pat_in = make_block_pattern(d, F, sp.density, sp.block, seed=sp.seed)
+        pat_out = make_block_pattern(F, d, sp.density, sp.block, seed=sp.seed + 1)
+        s_in = float(np.sqrt(2.0 / ((pat_in.fan_in_blocks + pat_in.fan_out_blocks) * sp.block)))
+        s_out = float(np.sqrt(2.0 / ((pat_out.fan_in_blocks + pat_out.fan_out_blocks) * sp.block)))
+        shp_in = (E, pat_in.n_out_blocks, pat_in.fan_in_blocks, sp.block, sp.block)
+        shp_out = (E, pat_out.n_out_blocks, pat_out.fan_in_blocks, sp.block, sp.block)
+        p.update({
+            "wi": jax.random.normal(ks[1], shp_in, dtype) * s_in,
+            "wg": jax.random.normal(ks[2], shp_in, dtype) * s_in,
+            "wo": jax.random.normal(ks[3], shp_out, dtype) * s_out,
+            "idx_in": jnp.asarray(pat_in.idx),
+            "idx_out": jnp.asarray(pat_out.idx),
+        })
+    else:
+        p.update({
+            "wi": jax.random.normal(ks[1], (E, d, F), dtype) * scale_in,
+            "wg": jax.random.normal(ks[2], (E, d, F), dtype) * scale_in,
+            "wo": jax.random.normal(ks[3], (E, F, d), dtype) * scale_out,
+        })
+    if mo.num_shared:
+        # d_shared is the *combined* hidden width of the always-on experts
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=mo.d_shared, dtype=dtype, seed=seed + 7)
+    return p
+
+
+def _expert_apply(w, idx, x):
+    """Batched block-sparse expert matmul: x [G,E,C,din] -> [G,E,C,dout].
+    Accumulates over fan-in slots to avoid the kb-times gather blow-up."""
+    E, nob, kb, bs, _ = w.shape
+    G, _, C, din = x.shape
+    xb = x.reshape(G, E, C, din // bs, bs)
+    wc = w.astype(x.dtype)
+    y = None
+    for k in range(kb):
+        xk = jnp.take(xb, idx[:, k], axis=3)          # [G,E,C,nob,bs]
+        part = jnp.einsum("GECob,Eobc->GECoc", xk, wc[:, k])
+        y = part if y is None else y + part
+    return y.reshape(G, E, C, nob * bs)
+
+
+def moe_apply(p: Params, x, cfg: ArchConfig):
+    """x [B,S,D] -> (y, aux_loss)."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    E, K = mo.num_experts, mo.top_k
+    T = B * S
+    g = min(mo.group_size, T)
+    assert T % g == 0, f"tokens {T} not divisible by moe group {g}"
+    G = T // g
+    C = int(np.ceil(g * K * mo.capacity_factor / E))
+    C = max(4, -(-C // 4) * 4)  # round up to a multiple of 4
+
+    xt = x.reshape(G, g, D)
+    logits = jnp.einsum("Ggd,de->Gge", xt, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)      # [G,g,E]
+    top_p, top_e = jax.lax.top_k(probs, K)                           # [G,g,K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)           # renorm
+
+    # position-in-expert via cumsum over tokens (slot k-major then token)
+    mask = jax.nn.one_hot(top_e, E, dtype=jnp.float32)               # [G,g,K,E]
+    mask_flat = mask.transpose(0, 2, 1, 3).reshape(G, K * g, E)      # k-major
+    pos = jnp.cumsum(mask_flat, axis=1) - 1.0                        # [G,Kg,E]
+    keep = (pos < C) * mask_flat
+    pos = pos.reshape(G, K, g, E).transpose(0, 2, 1, 3)              # [G,g,K,E]
+    keep = keep.reshape(G, K, g, E).transpose(0, 2, 1, 3)
+
+    # aux load-balance loss (fraction routed vs mean prob), Switch-style
+    f_e = jnp.mean(mask[..., 0, :] if K == 1 else jnp.sum(mask, axis=2), axis=(0, 1)) / K
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e) * mo.aux_loss_weight
+
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)  # [G,g,K,E,C]
+    dispatch = jnp.einsum("GgKE,GgKEC->GgEC", keep, pos_oh)
+    combine = jnp.einsum("GgK,GgKE,GgKEC->GgEC", top_p, keep, pos_oh)
+
+    xd = jnp.einsum("GgEC,Ggd->GECd", dispatch.astype(x.dtype), xt)
+    if "idx_in" in p:   # pre-defined-sparse experts (the paper's technique)
+        h = (jax.nn.silu(_expert_apply(p["wg"], p["idx_in"], xd))
+             * _expert_apply(p["wi"], p["idx_in"], xd))
+        ye = _expert_apply(p["wo"], p["idx_out"], h)
+    else:
+        h = (jax.nn.silu(jnp.einsum("GECd,Edf->GECf", xd, p["wg"].astype(x.dtype)))
+             * jnp.einsum("GECd,Edf->GECf", xd, p["wi"].astype(x.dtype)))
+        ye = jnp.einsum("GECf,Efd->GECd", h, p["wo"].astype(x.dtype))
+    y = jnp.einsum("GgEC,GECd->Ggd", combine.astype(x.dtype), ye)
+    y = y.reshape(B, S, D)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y, aux

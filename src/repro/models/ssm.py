@@ -1,0 +1,238 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 / SSD (zamba2).
+
+Training/prefill use a *chunked* parallel scan: an outer ``lax.scan`` over
+sequence chunks carries the recurrent state; inside a chunk the recurrence
+is solved in parallel (associative scan for Mamba-1, the matmul-form SSD
+for Mamba-2).  Live memory is O(B * chunk * d_inner * d_state) per step —
+the reason falcon-mamba train_4k fits (DESIGN.md Sec. 5).
+
+Decode is the O(1) recurrent step on (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import sparse_linear as sl
+
+Params = dict[str, Any]
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv.  x [B,S,C]; w [K,C]; returns (y, new_state).
+
+    conv_state [B,K-1,C] carries the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return y.astype(x.dtype), new_state
+
+
+# ====================================================================
+# Mamba-1 (selective scan, diagonal A per channel, d_state = N)
+# ====================================================================
+def mamba1_init(key, cfg: ArchConfig, dtype=jnp.float32, seed: int = 0) -> Params:
+    d, di, N, R = cfg.d_model, cfg.d_inner_, cfg.ssm_state, cfg.dt_rank_
+    ks = jax.random.split(key, 6)
+    sp = cfg.sparsity
+    p: Params = {
+        "in_proj": sl.init_linear(ks[0], d, 2 * di, family="ffn", sp=sp, dtype=dtype, seed=seed),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, di), dtype) / float(np.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": sl.init_dense(ks[2], di, R + 2 * N, dtype=dtype),
+        "dt_proj": sl.init_dense(ks[3], R, di, bias=True, dtype=dtype),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=dtype), (di, N))),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": sl.init_linear(ks[4], di, d, family="ffn", sp=sp, dtype=dtype, seed=seed + 1),
+    }
+    return p
+
+
+def _ssm_chunk_scan(decay, inp, h0):
+    """Solve h_t = decay_t * h_{t-1} + inp_t within a chunk, in parallel.
+
+    decay/inp: [B, c, ...state dims...]; h0 same without c."""
+    def combine(a, b):
+        (da, xa), (db, xb) = a, b
+        return da * db, xa * db + xb
+    d_cum, x_cum = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    h = d_cum * h0[:, None] + x_cum
+    return h, h[:, -1]
+
+
+def mamba1_apply(p: Params, x, cfg: ArchConfig, cache: dict | None = None,
+                 decode: bool = False):
+    """x [B,S,d_model] -> (y, new_cache).  Cache: conv [B,K-1,di], ssm [B,di,N]."""
+    B, S, _ = x.shape
+    di, N, R = cfg.d_inner_, cfg.ssm_state, cfg.dt_rank_
+    xz = sl.apply(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype), conv_state)
+    xs = jax.nn.silu(xs)
+
+    dbc = sl.apply_dense(p["x_proj"], xs)
+    dt, Bc, Cc = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(sl.apply_dense(p["dt_proj"], dt).astype(jnp.float32))  # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                               # [di,N]
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+    xf = xs.astype(jnp.float32)
+
+    if decode:  # S == 1 recurrent step
+        h_prev = cache["ssm"]                                   # [B,di,N]
+        decay = jnp.exp(dt[:, 0, :, None] * A[None])            # [B,di,N]
+        inp = (dt[:, 0, :, None] * Bc[:, 0, None, :]) * xf[:, 0, :, None]
+        h = decay * h_prev + inp
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None, :]
+        new_ssm = h
+    else:
+        c = min(cfg.ssm_chunk, S)
+        assert S % c == 0, f"seq {S} not divisible by ssm chunk {c}"
+        nc = S // c
+        scan_dt = jnp.dtype(cfg.ssm_scan_dtype)
+
+        def chunk_step(h0, args):
+            dt_c, B_c, C_c, x_c = args                           # [B,c,...]
+            decay = jnp.exp(dt_c[..., None] * A[None, None])     # [B,c,di,N]
+            inp = (dt_c[..., None] * B_c[:, :, None, :]) * x_c[..., None]
+            # the [B,c,di,N] associative-scan elements dominate SSM-training
+            # HBM traffic; bf16 here halves it, carry stays fp32 (§Perf F1)
+            h, h_last = _ssm_chunk_scan(decay.astype(scan_dt),
+                                        inp.astype(scan_dt),
+                                        h0.astype(scan_dt))
+            y = jnp.einsum("bcdn,bcn->bcd", h.astype(jnp.float32), C_c)
+            return h_last.astype(jnp.float32), y
+
+        if cfg.remat:
+            chunk_step = jax.checkpoint(chunk_step)
+        h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+              else jnp.zeros((B, di, N), jnp.float32))
+        resh = lambda t: t.reshape(B, nc, c, *t.shape[2:]).swapaxes(0, 1)
+        h_last, ys = jax.lax.scan(
+            chunk_step, h0, (resh(dt), resh(Bc), resh(Cc), resh(xf)))
+        y = ys.swapaxes(0, 1).reshape(B, S, di)
+        new_ssm = h_last
+
+    y = y + p["D"].astype(jnp.float32)[None, None] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = sl.apply(p["out_proj"], y)
+    new_cache = ({"conv": new_conv, "ssm": new_ssm.astype(
+        cache["ssm"].dtype if cache is not None else jnp.float32)}
+        if (cache is not None or decode) else None)
+    return out, new_cache
+
+
+# ====================================================================
+# Mamba-2 / SSD (scalar decay per head, matmul-form chunk algorithm)
+# ====================================================================
+def mamba2_init(key, cfg: ArchConfig, dtype=jnp.float32, seed: int = 0) -> Params:
+    d, di, N = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    H = cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    sp = cfg.sparsity
+    # separate projections (z | x,B,C | dt) so every out-dim shards cleanly
+    # on the model axis — a fused [d, 2di+2N+H] weight has split boundaries
+    # that misalign with the shard grid and forces resharding per layer
+    p: Params = {
+        "in_z": sl.init_linear(ks[0], d, di, family="ffn", sp=sp,
+                               dtype=dtype, seed=seed),
+        "in_xbc": sl.init_linear(ks[3], d, di + 2 * N, family="ffn", sp=sp,
+                                 dtype=dtype, seed=seed + 2),
+        "in_dt": sl.init_dense(ks[4], d, H, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, di + 2 * N), dtype)
+                  / float(np.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "A_log": jnp.zeros((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "out_proj": sl.init_linear(ks[2], di, d, family="ffn", sp=sp,
+                                   dtype=dtype, seed=seed + 1),
+    }
+    return p
+
+
+def mamba2_apply(p: Params, x, cfg: ArchConfig, cache: dict | None = None,
+                 decode: bool = False):
+    """SSD.  Cache: conv [B,K-1,di+2N], ssm [B,H,hd,N]."""
+    B, S, _ = x.shape
+    di, N = cfg.d_inner_, cfg.ssm_state
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    z = sl.apply(p["in_z"], x)
+    xbc = sl.apply(p["in_xbc"], x)
+    dt = sl.apply_dense(p["in_dt"], x)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                                      # [H]
+    xh = xs.reshape(B, S, H, hd).astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)                                                       # [B,S,N]
+    Cf = Cc.astype(jnp.float32)
+
+    if decode:
+        h_prev = cache["ssm"].astype(jnp.float32)               # [B,H,hd,N]
+        decay = jnp.exp(dt[:, 0] * A[None])                     # [B,H]
+        inp = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], Bf[:, 0])
+        h = decay[..., None, None] * h_prev + inp
+        y = jnp.einsum("bhpn,bn->bhp", h, Cf[:, 0]).reshape(B, 1, di)
+        new_ssm = h
+    else:
+        c = min(cfg.ssm_chunk, S)
+        assert S % c == 0
+        nc = S // c
+
+        def chunk_step(h0, args):
+            dt_c, B_c, C_c, x_c = args       # [B,c,H] [B,c,N] [B,c,N] [B,c,H,hd]
+            la = dt_c * A[None, None]        # log decay per step  [B,c,H]
+            cum = jnp.cumsum(la, axis=1)     # [B,c,H]
+            # intra-chunk: L[t,s] = exp(cum_t - cum_s - la_s ... ) using
+            # h_t = sum_{s<=t} exp(cum_t - cum_s) dt_s B_s x_s
+            diff = cum[:, :, None, :] - cum[:, None, :, :]       # [B,t,s,H]
+            L = jnp.where(jnp.arange(c)[:, None] >= jnp.arange(c)[None, :],
+                          jnp.exp(diff.transpose(0, 3, 1, 2)), 0.0)  # [B,H,t,s]
+            G = jnp.einsum("btn,bsn->bts", C_c, B_c)             # [B,t,s]
+            M = L * G[:, None]                                   # [B,H,t,s]
+            y_intra = jnp.einsum("bhts,bsh,bshp->bthp", M, dt_c, x_c)
+            # contribution of incoming state
+            y_inter = jnp.einsum("bth,bhpn,btn->bthp", jnp.exp(cum), h0, C_c)
+            # new state
+            w = jnp.exp(cum[:, -1:, :] - cum)                    # decay to end
+            h_new = (jnp.exp(cum[:, -1])[:, :, None, None] * h0
+                     + jnp.einsum("bsh,bsh,bshp,bsn->bhpn", w, dt_c, x_c, B_c))
+            return h_new, y_intra + y_inter
+
+        if cfg.remat:
+            chunk_step = jax.checkpoint(chunk_step)
+        h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+              else jnp.zeros((B, H, hd, N), jnp.float32))
+        resh = lambda t: t.reshape(B, nc, c, *t.shape[2:]).swapaxes(0, 1)
+        h_last, ys = jax.lax.scan(chunk_step, h0, (resh(dt), resh(Bf), resh(Cf), resh(xh)))
+        y = ys.swapaxes(0, 1).reshape(B, S, H, hd).reshape(B, S, di)
+        new_ssm = h_last
+
+    if not decode:
+        y = y + (p["D"].astype(jnp.float32)[None, None, :, None]
+                 * xh.reshape(B, S, H, hd)).reshape(B, S, di)
+    else:
+        y = y + (p["D"].astype(jnp.float32)[None, :, None] * xh[:, 0]).reshape(B, 1, di)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = sl.apply(p["out_proj"], y)
+    new_cache = ({"conv": new_conv, "ssm": new_ssm.astype(
+        cache["ssm"].dtype if cache is not None else jnp.float32)}
+        if (cache is not None or decode) else None)
+    return out, new_cache

@@ -1,0 +1,110 @@
+"""Minimal optimizer library (no optax in this environment).
+
+Optimizers are (init, update) pairs over pytrees.  Integer leaves — the
+pre-defined sparsity patterns (``idx``/``rev_ob``/``rev_t``) — are
+*structural*, not trainable: they are skipped by construction, mirroring
+the paper's fixed connectivity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_trainable(leaf) -> bool:
+    return jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+
+
+def trainable_mask(params):
+    return jax.tree.map(_is_trainable, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [g for g in jax.tree.leaves(grads) if _is_trainable(g)]
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(
+        lambda g: g * scale if _is_trainable(g) else g, grads), gn
+
+
+def sgd(lr_fn: Callable[[jax.Array], jax.Array]) -> Optimizer:
+    """Plain gradient descent — the paper's eq. (3) update rule."""
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        new_params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(p.dtype)) if _is_trainable(p) else p,
+            params, grads)
+        return new_params, state
+    return Optimizer(init, update)
+
+
+def adam(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+         grad_clip: float | None = 1.0, master_copy: bool = False) -> Optimizer:
+    """Adam with optional fp32 master copies.
+
+    master_copy=True supports bf16-resident params: the model tree (what the
+    compute graph — and therefore the FSDP all-gathers — sees) stays bf16,
+    while full-precision masters live in the optimizer state.  XLA's SPMD
+    partitioner re-orders convert-after-gather, so casting inside the step
+    cannot shrink gather traffic — storing bf16 params is the reliable way
+    (§Perf iteration C1)."""
+    def init(params):
+        zeros = lambda p: (jnp.zeros_like(p, dtype=jnp.float32)
+                           if _is_trainable(p) else jnp.zeros((), jnp.float32))
+        st = {"m": jax.tree.map(zeros, params),
+              "v": jax.tree.map(zeros, params)}
+        if master_copy:
+            st["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32) if _is_trainable(p)
+                else jnp.zeros((), jnp.float32), params)
+        return st
+
+    def update(grads, state, params, step):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(p, g, m, v, master):
+            if not _is_trainable(p):
+                return p, m, v, master
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            ref = master if master_copy else p.astype(jnp.float32)
+            step_ = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * ref
+            new_master = ref - lr * step_
+            return (new_master.astype(p.dtype), m, v,
+                    new_master if master_copy else master)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_ma = (treedef.flatten_up_to(state["master"]) if master_copy
+                   else [None] * len(flat_p))
+        out = [upd(*a) for a in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_st = {"m": treedef.unflatten([o[1] for o in out]),
+                  "v": treedef.unflatten([o[2] for o in out])}
+        if master_copy:
+            new_st["master"] = treedef.unflatten([o[3] for o in out])
+        return new_p, new_st
+    return Optimizer(init, update)

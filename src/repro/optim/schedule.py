@@ -1,0 +1,34 @@
+"""Learning-rate schedules.
+
+``paper_halving_schedule`` is the paper's exact recipe (Sec. III-B): eta
+starts at 2^-3, halves after the first 2 epochs, then every 4 epochs, floored
+at 2^-7.  Keeping eta a power of two turns the eq. (3) multiplies into bit
+shifts on the FPGA; here it keeps the fixed-point update exact on the
+(b_w, b_n, b_f) grid.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paper_halving_schedule(steps_per_epoch: int):
+    def lr(step):
+        epoch = step // steps_per_epoch
+        halvings = jnp.where(epoch < 2, 0, 1 + (epoch - 2) // 4)
+        exp = jnp.clip(3 + halvings, 3, 7)
+        return jnp.power(2.0, -exp.astype(jnp.float32))
+    return lr
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(1, warmup)
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(v: float):
+    return lambda step: jnp.full((), v, jnp.float32)

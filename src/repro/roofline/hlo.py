@@ -1,0 +1,326 @@
+"""Optimized-HLO walker: per-device FLOPs / bytes / collective traffic.
+
+Why not ``compiled.cost_analysis()`` alone?  XLA's HloCostAnalysis counts a
+``while`` body ONCE — our models scan over layers, so raw cost_analysis
+under-reports by ~n_layers (verified in tests/test_roofline.py).  This
+walker builds the computation call graph (while bodies/conds, fusions,
+calls), extracts scan trip counts from the loop conditions, and multiplies.
+
+Counted per device (the module is post-SPMD-partitioning):
+  * dot_flops      — 2 * prod(out) * prod(contracting)  for every dot,
+                     times call-graph multiplicity.  Elementwise FLOPs are
+                     excluded (they are roofline-irrelevant next to dots;
+                     the memory term covers their traffic).
+  * mem_bytes      — Σ (operand + output bytes) over *materializing* ops
+                     (fusion boundaries, dots, copies, collectives,
+                     dynamic-(update-)slice, ...), times multiplicity.
+                     A fusion's internals stay in registers/VMEM — this is
+                     the standard HBM-traffic approximation.
+  * coll_bytes     — Σ output bytes of all-reduce / all-gather /
+                     reduce-scatter / all-to-all / collective-permute
+                     (+ async -start forms), times multiplicity; all-reduce
+                     costs 2x (reduce-scatter + all-gather on a ring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops whose operands/outputs hit HBM (plus every fusion/dot/collective)
+_MATERIALIZING = {
+    "fusion", "dot", "copy", "convert", "broadcast", "transpose", "reshape",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "slice", "pad",
+    "reduce", "reduce-window", "scatter", "gather", "iota", "sort", "select",
+    "convolution", "rng", "cholesky", "triangular-solve", "custom-call",
+}
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    inside: str = ""          # raw text between the opcode's parens
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict[str, str]          # symbol table: %name -> type string
+
+
+def _parse_operands(rest: str) -> tuple[list[str], str, str]:
+    """rest starts right after 'opcode(' — split operands at matching paren."""
+    depth, i = 1, 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    inside, attrs = rest[: i - 1], rest[i:]
+    ops = re.findall(r"%([\w\.\-]+)", inside)
+    return ops, attrs, inside
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            # parameter decls inside signature etc.
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        after = line[m.end():]
+        operands, attrs, inside = _parse_operands(after)
+        cur.instrs.append(Instr(name, type_str, opcode, operands, attrs, inside))
+        cur.shapes[name] = type_str
+    return comps
+
+
+# slicing ops: the data operand's HBM traffic is the slice, not the tensor
+_SLICING = {"dynamic-slice", "slice", "gather"}
+
+
+def _effective_read_bytes(comp: Computation, operand: str) -> float:
+    """HBM bytes read from ``operand`` within ``comp``.
+
+    If every use is the data operand of a slicing op (the scan pattern:
+    dynamic-slice of stacked layer params), charge the slice outputs, not
+    the whole tensor — otherwise a [L, ...] stack gets charged L times per
+    loop trip.  dynamic-update-slice writes charge the update operand."""
+    total, any_full = 0.0, False
+    used = False
+    for ins in comp.instrs:
+        for pos, o in enumerate(ins.operands):
+            if o != operand:
+                continue
+            used = True
+            if ins.opcode in _SLICING and pos == 0:
+                total += type_bytes(ins.type_str)
+            elif ins.opcode == "dynamic-update-slice" and pos == 0:
+                upd = ins.operands[1] if len(ins.operands) > 1 else None
+                total += type_bytes(comp.shapes.get(upd, "")) if upd else 0.0
+            else:
+                any_full = True
+    if not used:
+        return 0.0
+    if any_full:
+        return float(type_bytes(comp.shapes.get(operand, "")))
+    return total
+
+
+def _fusion_param_bytes(comps: dict, fused_name: str, arg_types: list[str]) -> float:
+    """Effective read bytes of a fusion's args, slice-aware inside the body."""
+    comp = comps.get(fused_name)
+    if comp is None:
+        return sum(type_bytes(t) for t in arg_types)
+    # map parameter index -> internal name
+    pnames: dict[int, str] = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"\s*(\d+)", ins.inside)
+            if m:
+                pnames[int(m.group(1))] = ins.name
+    total = 0.0
+    for i, t in enumerate(arg_types):
+        pname = pnames.get(i)
+        if pname is None:
+            total += type_bytes(t)
+            continue
+        eff = _effective_read_bytes(comp, pname)
+        total += min(eff if eff else type_bytes(t), type_bytes(t))
+    return total
+
+
+def parse_trip_counts(text: str) -> dict[str, int]:
+    """cond computation name -> trip count, parsed from raw text."""
+    counts: dict[str, int] = {}
+    cur = None
+    consts: list[int] = []
+    for raw in text.splitlines():
+        line = raw.strip()
+        m = _COMP_HDR.match(line)
+        if m and line.endswith("{"):
+            cur, consts = m.group(2), []
+            continue
+        if line == "}":
+            if cur is not None:
+                counts[cur] = max(consts) if consts else 1
+            cur = None
+            continue
+        mm = re.search(r"=\s*s32\[\]\s*constant\((\d+)\)", line)
+        if mm:
+            consts.append(int(mm.group(1)))
+    return counts
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_detail: dict = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: list = dataclasses.field(default_factory=list)
+
+    def merge_scaled(self, other: "HloCosts", k: float):
+        self.dot_flops += k * other.dot_flops
+        self.mem_bytes += k * other.mem_bytes
+        self.coll_bytes += k * other.coll_bytes
+        for op, (b, c) in other.coll_detail.items():
+            b0, c0 = self.coll_detail.get(op, (0.0, 0.0))
+            self.coll_detail[op] = (b0 + k * b, c0 + k * c)
+
+
+def analyze(text: str) -> HloCosts:
+    comps = parse_module(text)
+    trips = parse_trip_counts(text)
+    memo: dict[tuple, HloCosts] = {}
+
+    def comp_cost(name: str, stack: tuple = (), count_mem: bool = True) -> HloCosts:
+        key = (name, count_mem)
+        if key in memo:
+            return memo[key]
+        if name not in comps or name in stack:
+            return HloCosts()
+        c = comps[name]
+        out = HloCosts()
+        for ins in c.instrs:
+            op = ins.opcode
+            # ---- control flow / call graph
+            if op == "while":
+                m_body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                m_cond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                trip = trips.get(m_cond.group(1), 1) if m_cond else 1
+                out.n_while += 1
+                out.trip_counts.append(trip)
+                if m_body:
+                    sub = comp_cost(m_body.group(1), stack + (name,), count_mem)
+                    out.merge_scaled(sub, trip)
+                    out.n_while += sub.n_while
+                continue
+            if op in ("fusion", "call", "async-start"):
+                m_calls = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.attrs)
+                if m_calls:
+                    # fusion internals: flops/collectives yes, HBM traffic no
+                    # (internal values live in registers/VMEM)
+                    out.merge_scaled(
+                        comp_cost(m_calls.group(1), stack + (name,),
+                                  count_mem=(op != "fusion")), 1.0)
+            if op == "conditional":
+                for branch in re.findall(r"branch_computations=\{([^}]*)\}", ins.attrs):
+                    for b in re.findall(r"%([\w\.\-]+)", branch):
+                        out.merge_scaled(comp_cost(b, stack + (name,), count_mem), 1.0)
+                m2 = re.findall(r"(?:true_computation|false_computation)=%?([\w\.\-]+)",
+                                ins.attrs)
+                for b in m2:
+                    out.merge_scaled(comp_cost(b, stack + (name,), count_mem), 1.0)
+            # ---- dot flops
+            if op == "dot":
+                dims_out = shape_dims(ins.type_str)
+                flops = 2.0
+                for d in dims_out:
+                    flops *= d
+                m_c = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+                if m_c and ins.operands:
+                    lhs_shape = shape_dims(c.shapes.get(ins.operands[0], ""))
+                    for ci in m_c.group(1).split(","):
+                        if ci and lhs_shape:
+                            idx = int(ci)
+                            if idx < len(lhs_shape):
+                                flops *= lhs_shape[idx]
+                out.dot_flops += flops
+            # ---- collectives
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES:
+                b = type_bytes(ins.type_str)
+                factor = 2.0 if base == "all-reduce" else 1.0
+                out.coll_bytes += factor * b
+                b0, c0 = out.coll_detail.get(base, (0.0, 0.0))
+                out.coll_detail[base] = (b0 + factor * b, c0 + 1)
+            # ---- memory traffic at materialization boundaries (slice-aware)
+            if count_mem and (op in _MATERIALIZING or base in COLLECTIVES
+                              or op == "dot"):
+                if op in _SLICING:
+                    b = 2.0 * type_bytes(ins.type_str)       # read + write slice
+                elif op == "dynamic-update-slice":
+                    upd = ins.operands[1] if len(ins.operands) > 1 else None
+                    b = 2.0 * type_bytes(c.shapes.get(upd, "")) if upd else 0.0
+                elif op == "fusion":
+                    m_calls = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+                    arg_types = [c.shapes.get(o, "") for o in ins.operands]
+                    b = type_bytes(ins.type_str)
+                    if m_calls:
+                        b += _fusion_param_bytes(comps, m_calls.group(1), arg_types)
+                    else:
+                        b += sum(type_bytes(t) for t in arg_types)
+                else:
+                    b = type_bytes(ins.type_str)
+                    for o in ins.operands:
+                        b += type_bytes(c.shapes.get(o, ""))
+                out.mem_bytes += b
+        memo[key] = out
+        return out
+
+    entry = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_HDR.match(s)
+            if m:
+                entry = m.group(2)
+                break
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda k: len(comps[k].instrs))
+    return comp_cost(entry)

@@ -1,0 +1,86 @@
+"""Batched serving engine: continuous batched decode over a shared cache.
+
+Requests arrive with prompts; the engine prefills them as a batch, then
+decodes step-locked (one ``decode_step`` per tick for the whole batch),
+sampling greedily or by temperature.  Slot management is static-batch
+(the dry-run shapes fix the batch); a finished sequence's slot keeps
+decoding into a scratch position and is masked out — the standard
+fixed-shape TPU serving pattern (shape stability = no recompiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_token: int = -1     # -1: never stop early
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg or ServeConfig()
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, extra_inputs: dict | None = None):
+        """prompts [B, S_prompt] int32 (right-aligned, padded with 0).
+        Returns tokens [B, max_new_tokens]."""
+        B, S = prompts.shape
+        total = S + self.scfg.max_new_tokens
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        logits, cache = self._prefill(self.params, batch)
+        # re-home the prefill cache into a decode-capacity cache
+        cache = self._grow_cache(cache, B, total, S)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        tok = self._sample(logits[:, -1], key)[:, None]
+        out = [tok]
+        done = jnp.zeros((B,), bool)
+        for i in range(self.scfg.max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.asarray(S + i, jnp.int32))
+            nxt = self._sample(logits[:, -1], sub)[:, None]
+            if self.scfg.eos_token >= 0:
+                done = done | (tok[:, 0] == self.scfg.eos_token)
+                nxt = jnp.where(done[:, None], self.scfg.eos_token, nxt)
+            tok = nxt
+            out.append(tok)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    def _grow_cache(self, cache, B, total, S):
+        """Copy the prefill cache (seq length S) into a total-capacity one."""
+        full = M.make_cache(self.cfg, B, total)
+
+        def place(dst, src):
+            if dst.shape == src.shape:
+                return src.astype(dst.dtype)
+            if dst.ndim >= 3 and src.ndim == dst.ndim and src.shape[2] <= dst.shape[2] \
+                    and dst.shape[:2] == src.shape[:2]:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), 0, 2)
+            return src.astype(dst.dtype)  # state caches (conv/ssm): same shape
+
+        return jax.tree.map(place, full, cache)

@@ -1,0 +1,91 @@
+"""jit-able train / serve step functions — the units the launcher lowers.
+
+These are pure functions of (params, opt_state, batch); distribution comes
+entirely from the in/out shardings the launcher attaches (parallel/sharding.py),
+so the same step runs on 1 CPU device (smoke tests) or a 512-chip mesh
+(dry-run) unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.optim import Optimizer
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    With microbatches > 1 the batch is split and gradients accumulated in a
+    scan — per-microbatch psums overlap with the next microbatch's compute
+    (the paper's operational parallelization applied at the pod scale)."""
+
+    def loss(params, batch):
+        if cfg.cast_params_once:
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p, params)
+        return M.loss_fn(cfg, params, batch)
+
+    # allow_int: sparse layers carry int32 pattern arrays in params — their
+    # "gradients" are float0 placeholders the optimizer never touches
+    vg = jax.value_and_grad(loss, has_aux=True, allow_int=True)
+
+    def _inexact(t):
+        return jnp.issubdtype(t.dtype, jnp.inexact)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            (l, metrics), grads = vg(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda t: t.reshape(microbatches, t.shape[0] // microbatches,
+                                    *t.shape[1:]), batch)
+
+            def acc_fn(carry, b):
+                (l_a, g_a) = carry
+                (l, m), g = vg(params, b)
+                g_acc = jax.tree.map(
+                    lambda a, gg: a + gg if _inexact(gg) else a, g_a, g)
+                return (l_a + l, g_acc), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32)
+                if _inexact(p) else jnp.zeros((), jnp.float32), params)
+            (l, grads), ms = jax.lax.scan(acc_fn, (0.0, zeros), mb)
+            l = l / microbatches
+            grads = jax.tree.map(
+                lambda g: g / microbatches if _inexact(g) else g, grads)
+            metrics = jax.tree.map(lambda t: t[-1], ms)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        metrics = dict(metrics, loss=l)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill(params, batch):
+        logits, cache, _ = M.forward(cfg, params, batch, return_cache=True,
+                                     last_only=True)
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode(params, cache, token, pos):
+        return M.decode_step(cfg, params, cache, token, pos)
+    return decode
+
+
+def make_eval_step(cfg: ArchConfig):
+    def evaluate(params, batch):
+        l, metrics = M.loss_fn(cfg, params, batch)
+        return dict(metrics, loss=l)
+    return evaluate

@@ -1,0 +1,10 @@
+import os
+import sys
+from pathlib import Path
+
+# tests run on the single real CPU device (dryrun.py alone forces 512)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,91 @@
+"""Checkpointing: atomicity, bitwise restart, elastic reshard, async."""
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as C
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (17, 5)),
+            "b": {"c": jnp.arange(7, dtype=jnp.int32),
+                  "d": jax.random.normal(jax.random.fold_in(k, 1), (3,),
+                                         jnp.bfloat16)}}
+
+
+def test_bitwise_roundtrip(tmp_path):
+    t = _tree()
+    C.save(tmp_path, 5, t, extra={"step": 5, "data_state": {"seed": 1, "step": 9}})
+    got, extra = C.restore(tmp_path, 5, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        assert jnp.array_equal(a, b)
+    assert extra["data_state"] == {"seed": 1, "step": 9}
+
+
+def test_latest_skips_partial(tmp_path):
+    C.save(tmp_path, 1, _tree())
+    C.save(tmp_path, 2, _tree(1))
+    # a partial (crashed) checkpoint: directory without manifest
+    (tmp_path / "step_0000000003").mkdir()
+    assert C.latest_step(tmp_path) == 2
+
+
+def test_checksum_detects_corruption(tmp_path):
+    C.save(tmp_path, 1, _tree())
+    npz = tmp_path / "step_0000000001" / "arrays.npz"
+    data = dict(np.load(npz))
+    data["leaf_0"] = data["leaf_0"] + 1.0
+    np.savez(npz, **data)
+    with pytest.raises(IOError):
+        C.restore(tmp_path, 1, _tree())
+
+
+def test_async_saver(tmp_path):
+    s = C.AsyncSaver()
+    t = _tree()
+    s.save(tmp_path, 7, t, extra={"step": 7})
+    s.wait()
+    assert C.latest_step(tmp_path) == 7
+    got, _ = C.restore(tmp_path, 7, t)
+    assert jnp.array_equal(jax.tree.leaves(got)[0], jax.tree.leaves(t)[0])
+
+
+def test_elastic_reshard_subprocess(tmp_path):
+    """Save on an 8-device mesh, restore onto a 4-device mesh (elastic)."""
+    import subprocess, sys, textwrap
+    script = textwrap.dedent(f"""
+        import os, sys
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + sys.argv[1]
+        sys.path.insert(0, {str(Path(__file__).resolve().parents[1] / 'src')!r})
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from repro.train import checkpoint as C
+        n = int(sys.argv[1])
+        mesh = jax.make_mesh((n,), ("data",), devices=jax.devices(),
+                             axis_types=(AxisType.Auto,))
+        sh = NamedSharding(mesh, P("data"))
+        t = {{"w": jax.device_put(jnp.arange(32, dtype=jnp.float32), sh)}}
+        if sys.argv[2] == "save":
+            C.save({str(tmp_path)!r}, 1, t)
+        else:
+            got, _ = C.restore({str(tmp_path)!r}, 1, t, shardings={{"w": sh}})
+            assert got["w"].sharding.num_devices == n, got["w"].sharding
+            assert jnp.array_equal(got["w"], jnp.arange(32, dtype=jnp.float32))
+            print("RESHARD_OK")
+    """)
+    env = dict(os.environ)
+    r1 = subprocess.run([sys.executable, "-c", script, "8", "save"],
+                        capture_output=True, text=True, env=env)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    r2 = subprocess.run([sys.executable, "-c", script, "4", "load"],
+                        capture_output=True, text=True, env=env)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "RESHARD_OK" in r2.stdout

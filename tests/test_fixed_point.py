@@ -1,0 +1,79 @@
+"""Fixed-point arithmetic properties (paper Sec. III-C)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixed_point as fxp
+
+FMT = fxp.PAPER_FMT
+
+
+@given(st.floats(-100, 100, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_quantize_range_and_grid(x):
+    q = float(fxp.quantize(jnp.float32(x), FMT))
+    assert FMT.min_val <= q <= FMT.max_val
+    scaled = q * FMT.scale
+    assert abs(scaled - round(scaled)) < 1e-4, "on the 2^-bf grid"
+
+
+@given(st.floats(-8, 7.99, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_quantize_idempotent(x):
+    q1 = fxp.quantize(jnp.float32(x), FMT)
+    q2 = fxp.quantize(q1, FMT)
+    assert float(q1) == float(q2)
+
+
+@given(st.floats(-7.9, 7.9), st.integers(0, 2 ** 12 - 1))
+@settings(max_examples=100, deadline=None)
+def test_encode_decode_roundtrip(x, code):
+    q = fxp.quantize(jnp.float32(x), FMT)
+    assert float(fxp.decode(fxp.encode(q, FMT), FMT)) == float(q)
+    # codes roundtrip too (decode is the left inverse on valid codes)
+    v = fxp.decode(jnp.int32(code), FMT)
+    assert int(fxp.encode(v, FMT)) == code
+
+
+def test_clipping_saturates():
+    assert float(fxp.quantize(jnp.float32(10.0), FMT)) == FMT.max_val  # 7.996
+    assert float(fxp.quantize(jnp.float32(-10.0), FMT)) == FMT.min_val  # -8
+    assert abs(FMT.max_val - 7.99609375) < 1e-9
+
+
+def test_tree_sum_clipping_matters():
+    """Per-node clipping differs from clip-at-end — the hardware semantics."""
+    x = jnp.array([7.0, 7.0, -7.0, -6.0])
+    tree = float(fxp.tree_sum_clipped(x, FMT))
+    # tree: (7+7 -> clip 7.996) + (-7-6 -> clip -8) = -0.00390625
+    plain = float(fxp.quantize(jnp.sum(x), FMT))  # 1.0
+    assert tree != plain
+    assert abs(tree - fxp.quantize(jnp.float32(7.99609375 - 8.0), FMT)) < 1e-6
+
+
+@given(st.lists(st.floats(-1, 1), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_tree_sum_no_clip_equals_sum(vals):
+    """When nothing clips, the tree adder equals an exact sum of grid values."""
+    x = fxp.quantize(jnp.array(vals, jnp.float32), FMT)
+    if abs(float(jnp.sum(jnp.abs(x)))) < FMT.max_val:  # no clipping possible
+        got = float(fxp.tree_sum_clipped(x, FMT))
+        want = float(jnp.sum(x))
+        assert abs(got - want) < 1e-4
+
+
+def test_sigmoid_tables_match_ideal():
+    sig, dsig = fxp.sigmoid_tables(FMT)
+    assert sig.shape == (4096,)       # all 12-bit codes (paper III-D-1)
+    codes = np.arange(4096)
+    vals = np.where(codes >= 2048, codes - 4096, codes) / 256.0
+    ideal = 1 / (1 + np.exp(-vals))
+    assert np.max(np.abs(sig - ideal)) <= 2 ** -9 + 1e-9  # half-ulp of b_f=8
+    assert dsig.min() >= 0.0 and dsig.max() <= 0.25 + 1e-9
+
+
+def test_lut_sigmoid_on_grid():
+    x = fxp.quantize(jnp.linspace(-8, 7.9, 100), FMT)
+    s, ds = fxp.lut_sigmoid(x, FMT)
+    ideal = 1 / (1 + np.exp(-np.asarray(x)))
+    assert np.max(np.abs(np.asarray(s) - ideal)) < 2 ** -8

@@ -1,0 +1,74 @@
+"""Property tests for the clash-free interleavers and block patterns."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import interleaver as il
+
+
+@given(st.sampled_from([32, 64, 128, 256]), st.sampled_from([4, 8, 16, 32]),
+       st.integers(0, 10))
+@settings(max_examples=40, deadline=None)
+def test_affine_clash_free(w_mult, z, seed):
+    W = w_mult * z
+    pi = il.affine_interleaver(W, z, seed)
+    assert sorted(pi.tolist()) == list(range(W)), "must be a permutation"
+    assert il.is_clash_free(pi, z)
+
+
+@given(st.sampled_from([64, 128, 512]), st.sampled_from([8, 16, 32]),
+       st.integers(0, 10))
+@settings(max_examples=30, deadline=None)
+def test_sv_ss_clash_free_permutation(w_mult, z, seed):
+    W = w_mult * z
+    pi = il.sv_ss_interleaver(W, z, seed)
+    assert sorted(pi.tolist()) == list(range(W))
+    assert il.is_clash_free(pi, z)
+
+
+@given(st.integers(2, 24), st.integers(2, 24), st.integers(0, 5))
+@settings(max_examples=60, deadline=None)
+def test_block_pattern_balanced(nib, nob, seed):
+    # pick a fan-in that admits integral fan-out
+    import math
+    step = nib // math.gcd(nob, nib)
+    kb = min(nib, max(step, (nib // 2 // step) * step or step))
+    idx = il.block_circulant_pattern(nib, nob, kb, seed=seed)
+    fan_in, fan_out = il.pattern_fan_counts(idx, nib)
+    assert np.all(fan_in == kb), "fixed fan-in per output block"
+    assert np.all(fan_out == nob * kb // nib), "fixed fan-out per input block"
+    for r in range(nob):
+        assert len(np.unique(idx[r])) == kb, "no duplicate inputs per output"
+
+
+def test_reverse_pattern_roundtrip():
+    idx = il.block_circulant_pattern(16, 8, 4, seed=3)
+    rev_ob, rev_t, rev_cnt = il.reverse_block_pattern(idx, 16)
+    # every (ob, t) edge appears exactly once among the valid reverse slots
+    edges = set()
+    for ib in range(16):
+        for f in range(int(rev_cnt[ib])):
+            ob, t = int(rev_ob[ib, f]), int(rev_t[ib, f])
+            assert idx[ob, t] == ib
+            edges.add((ob, t))
+    assert len(edges) == 8 * 4
+    assert int(rev_cnt.sum()) == 8 * 4
+
+
+def test_reverse_pattern_strict_rejects_unbalanced():
+    idx = np.array([[0, 1], [0, 1]], dtype=np.int32)  # block 2,3 unused
+    with pytest.raises(ValueError):
+        il.reverse_block_pattern(idx, 4, strict=True)
+
+
+def test_ragged_pattern_near_balanced():
+    """Coprime dims (qwen2 FFN: 64 in-blocks, 231 out-blocks): fan-out is
+    balanced to +-1, fan-in stays exact — no density quantization."""
+    idx = il.block_circulant_pattern(64, 231, 8, seed=0)
+    assert idx.shape == (231, 8)
+    for r in range(231):
+        assert len(np.unique(idx[r])) == 8
+    counts = np.bincount(idx.reshape(-1), minlength=64)
+    assert counts.max() - counts.min() <= 1
+    rev_ob, rev_t, rev_cnt = il.reverse_block_pattern(idx, 64)
+    assert int(rev_cnt.sum()) == 231 * 8

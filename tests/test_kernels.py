@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparsity import make_block_pattern
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n_in,n_out,density", [
+    (512, 256, 0.25), (1024, 512, 0.125), (256, 256, 0.5), (384, 640, 0.34),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_sparse_fwd(n_in, n_out, density, dtype):
+    pat = make_block_pattern(n_in, n_out, density, 128)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (130, n_in)).astype(dtype)   # non-multiple rows
+    w = (jax.random.normal(jax.random.PRNGKey(1),
+                           (pat.n_out_blocks, pat.fan_in_blocks, 128, 128))
+         * 0.05).astype(dtype)
+    y = ops.block_sparse_matmul(x, w, jnp.asarray(pat.idx),
+                                jnp.asarray(pat.rev_ob), jnp.asarray(pat.rev_t),
+                                jnp.asarray(pat.rev_cnt))
+    yr = ref.block_sparse_matmul(x, w, jnp.asarray(pat.idx))
+    tol = 1e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=tol, atol=tol)
+
+
+def test_block_sparse_grads_vs_oracle():
+    pat = make_block_pattern(512, 384, 0.25, 128)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, 512))
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (pat.n_out_blocks, pat.fan_in_blocks, 128, 128)) * 0.05
+    idx = jnp.asarray(pat.idx)
+    rob, rt, rc = (jnp.asarray(pat.rev_ob), jnp.asarray(pat.rev_t),
+                   jnp.asarray(pat.rev_cnt))
+    co = jax.random.normal(jax.random.PRNGKey(2), (128, 384))
+
+    f = lambda x, w: jnp.sum(ops.block_sparse_matmul(x, w, idx, rob, rt, rc) * co)
+    g = lambda x, w: jnp.sum(ref.block_sparse_matmul(x, w, idx) * co)
+    dx1, dw1 = jax.grad(f, (0, 1))(x, w)
+    dx2, dw2 = jax.grad(g, (0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(dx1), np.asarray(dx2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dw1), np.asarray(dw2), rtol=1e-3, atol=1e-3)
+
+
+def test_block_sparse_bias_and_lead_dims():
+    pat = make_block_pattern(256, 128, 0.5, 128)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (pat.n_out_blocks, pat.fan_in_blocks, 128, 128)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (128,))
+    y = ops.block_sparse_matmul(x, w, jnp.asarray(pat.idx),
+                                jnp.asarray(pat.rev_ob), jnp.asarray(pat.rev_t),
+                                jnp.asarray(pat.rev_cnt), bias=b)
+    yr = ref.block_sparse_matmul(x.reshape(15, 256), w, jnp.asarray(pat.idx)) + b
+    np.testing.assert_allclose(np.asarray(y).reshape(15, 128), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (100, 200, 96), (257, 130, 50)])
+@pytest.mark.parametrize("bf,bn", [(8, 3), (5, 2), (11, 4)])
+def test_fxp_qmatmul_sweep(M, K, N, bf, bn):
+    key = jax.random.PRNGKey(M * K + N)
+    lim = 1 << (bn + bf)
+    a = jax.random.randint(key, (M, K), -lim, lim)
+    w = jax.random.randint(jax.random.PRNGKey(1), (K, N), -lim, lim)
+    y = ops.fxp_qmatmul(a, w, bf=bf, bn=bn)
+    yr = ref.fxp_qmatmul(a, w, bf, bn)
+    assert jnp.array_equal(y, yr), "fixed-point matmul must be bit-exact"
+
+
+def test_sigmoid_lut_kernel():
+    from repro.core import fixed_point as fxp
+    t, _ = fxp.sigmoid_tables(fxp.PAPER_FMT)
+    codes = jax.random.randint(jax.random.PRNGKey(0), (300, 77), 0, 4096)
+    y = ops.sigmoid_lut(codes, jnp.asarray(t))
+    assert jnp.array_equal(y, ref.sigmoid_lut(codes, jnp.asarray(t)))
+
+
+@pytest.mark.parametrize("B,S,di,N,chunk,bd", [
+    (2, 128, 512, 16, 64, 256), (1, 256, 256, 8, 128, 256), (3, 64, 1024, 32, 32, 512),
+])
+def test_selective_scan_kernel(B, S, di, N, chunk, bd):
+    """Fused Mamba-1 scan kernel (§Perf F4) vs sequential oracle."""
+    from repro.kernels.selective_scan import selective_scan
+    ks = jax.random.split(jax.random.PRNGKey(B * S + di), 6)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di))) * 0.1
+    x = jax.random.normal(ks[1], (B, S, di))
+    bc = jax.random.normal(ks[2], (B, S, N))
+    cc = jax.random.normal(ks[3], (B, S, N))
+    a = -jnp.exp(jax.random.normal(ks[4], (di, N)) * 0.3)
+    h0 = jax.random.normal(ks[5], (B, di, N)) * 0.1
+    y1, h1 = selective_scan(dt, x, bc, cc, a, h0, chunk=chunk, bd=bd,
+                            interpret=True)
+    y2, h2 = ref.selective_scan(dt, x, bc, cc, a, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=3e-4, rtol=3e-4)
+
+
+def test_selective_scan_traffic_model():
+    from repro.kernels.selective_scan import hbm_bytes
+    # falcon-mamba train_4k per-device slice: B=16, S=4096, di=512, N=16
+    per_layer = hbm_bytes(16, 4096, 512, 16)
+    assert per_layer < 0.5 * 2**30     # < 0.5 GiB per layer pass
+
+
+@pytest.mark.parametrize("H,Hkv,Sq,window", [
+    (4, 4, 128, 0), (8, 2, 128, 0), (4, 2, 256, 96), (2, 1, 64, 0),
+])
+def test_flash_attention_kernel(H, Hkv, Sq, window):
+    """Pallas flash attention vs naive oracle (causal + sliding window, GQA)."""
+    from repro.kernels.flash_attention import mha
+    B, D = 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(H * Sq), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sq, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sq, Hkv, D), jnp.float32)
+    got = mha(q, k, v, causal=True, window=window, interpret=True, bq=64, bk=64)
+
+    rep = H // Hkv
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((Sq, Sq), bool))
+    if window:
+        qp = jnp.arange(Sq)[:, None]
+        kp = jnp.arange(Sq)[None, :]
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)

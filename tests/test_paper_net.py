@@ -1,0 +1,120 @@
+"""The paper's Table-I network: structure, fixed point, pipelining."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixed_point as fxp
+from repro.core import junction_pipeline as JP
+from repro.core import paper_net as PN
+from repro.data.mnist import paper_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, labels = paper_dataset(2048, seed=0)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_table1_structure():
+    cfg = PN.PaperNetConfig()
+    assert cfg.n_params() == 5216                     # Sec. III-B
+    assert abs(cfg.overall_density() - 0.07576) < 1e-4
+    assert [cfg.weights(i) for i in range(2)] == [4096, 1024]
+    assert [cfg.d_in(i) for i in range(2)] == [64, 32]
+    assert [cfg.block_cycles(i) for i in range(2)] == [34, 34]  # W/z + 2
+    # equal block cycles across junctions -> full pipeline, no stalls
+    assert cfg.block_cycles(0) == cfg.block_cycles(1)
+
+
+def test_resource_model():
+    r = JP.resources(PN.PaperNetConfig())
+    # Sec. III-D-3: 224 DSP multipliers for FF+BP (z1+z2 + 2*z2)
+    assert r.ff_multipliers + r.bp_multipliers == 224
+    assert r.up_multipliers == 160
+    assert r.sigmoid_luts == 3
+    assert abs(JP.block_cycle_s(PN.PaperNetConfig()) - 34 / 15e6) < 1e-12
+
+
+def test_fxp_training_learns(data):
+    xs, ys = data
+    cfg = PN.PaperNetConfig(fmt=fxp.PAPER_FMT)
+    p = PN.init(cfg)
+    p, losses, corr = jax.jit(
+        lambda p: PN.train_epoch(p, xs, ys, 2.0 ** -3, cfg))(p)
+    assert float(corr[-256:].mean()) > 0.8
+
+
+def test_float_vs_fxp_parity(data):
+    """Paper Sec. III-D-6: fixed point within 1.5pp of ideal float."""
+    xs, ys = data
+    accs = {}
+    for name, fmt in [("float", None), ("fxp", fxp.PAPER_FMT)]:
+        cfg = PN.PaperNetConfig(fmt=fmt)
+        p = PN.init(cfg)
+        step = jax.jit(lambda p: PN.train_epoch(p, xs, ys, 2.0 ** -3, cfg))
+        for _ in range(2):
+            p, _, corr = step(p)
+        accs[name] = float(corr[-512:].mean())
+    assert abs(accs["float"] - accs["fxp"]) < 0.05   # 5pp margin on 2 epochs
+
+
+def test_pipelined_matches_sequential_convergence(data):
+    """Junction pipelining (stale updates) converges like sequential SGD."""
+    xs, ys = data
+    cfg = PN.PaperNetConfig(fmt=fxp.PAPER_FMT)
+    p_seq = PN.init(cfg)
+    p_pipe = PN.init(cfg)
+    seq = jax.jit(lambda p: PN.train_epoch(p, xs, ys, 2.0 ** -3, cfg))
+    pipe = jax.jit(lambda p: PN.train_epoch_pipelined(p, xs, ys, 2.0 ** -3, cfg))
+    for _ in range(2):
+        p_seq, _, corr_s = seq(p_seq)
+        p_pipe, corr_p = pipe(p_pipe)
+    a_s, a_p = float(corr_s[-512:].mean()), float(corr_p[-512:].mean())
+    assert a_p > 0.75 and abs(a_s - a_p) < 0.08
+
+
+def test_shared_init_mode_trains(data):
+    """Sec. III-C-1: W_i/z_i shared unique init values don't hurt."""
+    xs, ys = data
+    cfg = PN.PaperNetConfig(fmt=fxp.PAPER_FMT, init_mode="shared")
+    p = PN.init(cfg)
+    p, _, corr = jax.jit(lambda p: PN.train_epoch(p, xs, ys, 2.0 ** -3, cfg))(p)
+    assert float(corr[-256:].mean()) > 0.7
+
+
+@pytest.mark.parametrize("act", ["relu8", "relu1"])
+def test_relu_variants_run(data, act):
+    xs, ys = data
+    cfg = PN.PaperNetConfig(fmt=fxp.PAPER_FMT, activation=act)
+    p = PN.init(cfg)
+    p, _, corr = jax.jit(lambda p: PN.train_epoch(p, xs[:512], ys[:512],
+                                                  2.0 ** -3, cfg))(p)
+    assert np.isfinite(float(corr.mean()))
+
+
+def test_weights_stay_on_grid(data):
+    """Every parameter remains on the (12,3,8) grid after training."""
+    xs, ys = data
+    cfg = PN.PaperNetConfig(fmt=fxp.PAPER_FMT)
+    p = PN.init(cfg)
+    p, _, _ = jax.jit(lambda p: PN.train_epoch(p, xs[:512], ys[:512],
+                                               2.0 ** -3, cfg))(p)
+    for jp in p["junctions"]:
+        for leaf in (jp["w"], jp["b"]):
+            v = np.asarray(leaf) * cfg.fmt.scale
+            assert np.allclose(v, np.round(v), atol=1e-4)
+            assert v.max() <= cfg.fmt.max_val * cfg.fmt.scale + 1e-6
+            assert v.min() >= cfg.fmt.min_val * cfg.fmt.scale - 1e-6
+
+
+def test_z_sweep_model():
+    rows = JP.z_sweep_configs(PN.PaperNetConfig())
+    assert len(rows) >= 4
+    # throughput rises with z, resources rise with z (Fig. 8 trend)
+    tz = [r["total_z"] for r in rows]
+    bc = [r["block_cycle_s"] for r in rows]
+    mult = [r["multipliers"] for r in rows]
+    assert all(a < b for a, b in zip(tz, tz[1:]))
+    assert all(a >= b for a, b in zip(bc, bc[1:]))
+    assert all(a <= b for a, b in zip(mult, mult[1:]))

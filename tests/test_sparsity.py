@@ -1,0 +1,79 @@
+"""Invariants of pre-defined sparsity (paper Sec. II-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse_linear as sl
+from repro.core.sparsity import (SparsityConfig, make_block_pattern,
+                                 make_neuron_pattern)
+
+
+@given(st.sampled_from([(1024, 64, 64), (64, 32, 32), (256, 128, 16)]),
+       st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_neuron_pattern_paper_identity(cfg, seed):
+    """N_{i-1} * d_out = N_i * d_in = W_i, nobody disconnected."""
+    n_in, n_out, d_in = cfg
+    pat = make_neuron_pattern(n_in, n_out, d_in, seed=seed)
+    W = n_out * d_in
+    assert pat.d_out * n_in == W
+    counts = np.bincount(pat.idx.reshape(-1), minlength=n_in)
+    assert np.all(counts == pat.d_out), "every left neuron contributes equally"
+    for j in range(n_out):
+        assert len(np.unique(pat.idx[j])) == d_in, "no duplicate edges"
+
+
+def test_table1_densities():
+    """The exact Table-I junctions."""
+    j1 = make_neuron_pattern(1024, 64, 64)
+    j2 = make_neuron_pattern(64, 32, 32)
+    assert j1.density == 0.0625 and j1.d_out == 4 and j1.n_weights == 4096
+    assert j2.density == 0.5 and j2.d_out == 16 and j2.n_weights == 1024
+    overall = (j1.n_weights + j2.n_weights) / (1024 * 64 + 64 * 32)
+    assert abs(overall - 0.07576) < 1e-4
+
+
+def test_block_pattern_density_selection():
+    pat = make_block_pattern(1024, 512, density=0.25, block=128)
+    assert pat.n_weights <= 1024 * 512
+    assert 0.1 <= pat.density <= 0.5
+
+
+def test_sparse_linear_matches_dense_at_full_density():
+    key = jax.random.PRNGKey(0)
+    sp = SparsityConfig(density=1.01, block=32, where="ffn")  # kb == nib
+    # density > 1 clamps to full fan-in: block-sparse == dense reshuffled
+    p = sl.init_sparse(key, 128, 96, sp, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 128))
+    y = sl.apply_jnp(p, x)
+    # dense equivalent: scatter blocks back into a [128, 96] matrix
+    w = np.zeros((128, 96), np.float32)
+    wq = np.asarray(p["w"])
+    idx = np.asarray(p["idx"])
+    for ob in range(idx.shape[0]):
+        for t in range(idx.shape[1]):
+            ib = idx[ob, t]
+            w[ib * 32:(ib + 1) * 32, ob * 32:(ob + 1) * 32] = wq[ob, t]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ w,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_init_linear_falls_back_to_dense():
+    key = jax.random.PRNGKey(0)
+    sp = SparsityConfig(density=0.25, block=128, where="ffn")
+    p = sl.init_linear(key, 100, 64, family="ffn", sp=sp)  # not tileable
+    assert not sl.is_sparse(p)
+    p2 = sl.init_linear(key, 512, 256, family="attn", sp=sp)  # family off
+    assert not sl.is_sparse(p2)
+    p3 = sl.init_linear(key, 512, 256, family="ffn", sp=sp)
+    assert sl.is_sparse(p3)
+
+
+def test_sparse_params_not_trainable_ints():
+    from repro.optim.optimizers import _is_trainable
+    key = jax.random.PRNGKey(0)
+    sp = SparsityConfig(density=0.5, block=32)
+    p = sl.init_sparse(key, 128, 128, sp)
+    assert not _is_trainable(p["idx"])
+    assert _is_trainable(p["w"])
