@@ -1,0 +1,80 @@
+"""Engine-comparison benchmarks: jnp gather+einsum vs fused Pallas engine.
+
+Two junction shapes anchor the perf trajectory from this PR onward:
+
+* ``engine.mnist.*`` — the paper's MNIST junction in block form
+  (1024 -> 512 @ density 0.25, the TPU-native analogue of the 1024x64
+  d_out=8 junction the FPGA implements).
+* ``engine.ffn.*``   — a transformer FFN up-projection
+  (1024 -> 4096 @ density 0.25), the shape the ROADMAP north-star cares
+  about.
+
+Each row times one jit'd forward+backward (loss = sum(y)) per engine.
+Off-TPU the Pallas rows run in interpret mode — an emulator, so their
+absolute numbers only become meaningful on real hardware; the jnp rows
+are the portable baseline.  ``BENCH_*.json`` (benchmarks/run.py --json)
+makes the trajectory machine-trackable.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear as sl
+from repro.core.sparsity import SparsityConfig, make_block_pattern
+from repro.kernels import block_sparse_matmul as bsm
+
+SHAPES = {
+    # name: (n_in, n_out, density, block, M_fast, M_full)
+    "mnist": (1024, 512, 0.25, 128, 256, 12544),
+    "ffn": (1024, 4096, 0.25, 128, 256, 4096),
+}
+
+
+def _junction_params(n_in, n_out, density, block):
+    sp = SparsityConfig(density=density, block=block, where="ffn")
+    return sl.init_sparse(jax.random.PRNGKey(0), n_in, n_out, sp, bias=True)
+
+
+def _time_fwd_bwd(params, x, engine, n=3):
+    @jax.jit
+    def step(params, x):
+        def loss(w, x):
+            return jnp.sum(sl.apply(dict(params, w=w), x,
+                                    engine=engine, act="sigmoid"))
+        l, gw = jax.value_and_grad(loss)(params["w"], x)
+        return l, gw
+
+    out = step(params, x)           # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = step(params, x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def bench(fast=True):
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for name, (n_in, n_out, density, block, m_fast, m_full) in SHAPES.items():
+        M = m_fast if fast else m_full
+        params = _junction_params(n_in, n_out, density, block)
+        x = jax.random.normal(jax.random.PRNGKey(1), (M, n_in), jnp.float32)
+        pat = make_block_pattern(n_in, n_out, density, block)
+        grid = bsm.fwd_grid(M, pat.n_out_blocks, pat.fan_in_blocks, block,
+                            pat.n_in_blocks, 4)
+        # interpret-mode emulation is O(seconds); keep CI fast with n=1
+        n = 3 if on_tpu else 1
+        for engine in ("jnp", "pallas"):
+            dt = _time_fwd_bwd(params, x, engine, n=n)
+            mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+            rows.append({
+                "name": f"engine.{name}.{engine}",
+                "us_per_call": dt * 1e6,
+                "derived": f"M={M} {n_in}->{n_out} d={density} bs={block} "
+                           f"grid={grid[0]}x{grid[1]} mode={mode}",
+            })
+    return rows

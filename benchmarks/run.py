@@ -1,12 +1,18 @@
-"""Benchmark harness: one entry per paper table/figure + the roofline table.
+"""Benchmark harness: one entry per paper table/figure + the roofline table
++ the engine-comparison benches.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,fig8]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,engine]
+                                            [--json PATH]
 
-Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract); with
+``--json PATH`` also writes a ``BENCH_<tag>.json`` artifact mapping
+``name -> us_per_call`` so the perf trajectory is machine-trackable
+across PRs (diff two artifacts to see the movement).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -17,15 +23,20 @@ def main() -> None:
                     help="paper-scale epochs/samples (slow)")
     ap.add_argument("--only", default="",
                     help="comma list of bench names (default: all)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write a BENCH_<tag>.json artifact "
+                         "(name -> us_per_call) at PATH")
     args = ap.parse_args()
 
-    from benchmarks import paper_benches, roofline_table
+    from benchmarks import engine_benches, paper_benches, roofline_table
 
     benches = dict(paper_benches.BENCHES)
     benches["roofline"] = roofline_table.bench
+    benches["engine"] = engine_benches.bench
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")
     failures = 0
+    results: dict[str, float] = {}
     for name, fn in benches.items():
         if only and name not in only:
             continue
@@ -39,8 +50,15 @@ def main() -> None:
         for r in rows:
             derived = str(r["derived"]).replace(",", ";")
             print(f"{r['name']},{r['us_per_call']:.2f},{derived}")
+            results[r["name"]] = round(float(r["us_per_call"]), 2)
         sys.stderr.write(f"[bench] {name}: {len(rows)} rows "
                          f"in {time.perf_counter() - t0:.1f}s\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+        sys.stderr.write(f"[bench] wrote {len(results)} entries "
+                         f"to {args.json}\n")
     if failures:
         raise SystemExit(1)
 

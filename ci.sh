@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + the fast machine-trackable benches.
+#
+#   ./ci.sh            # tests + engine/roofline benches, BENCH_ci.json
+#   BENCH_TAG=pr42 ./ci.sh
+#
+# Fails on test failures or bench harness errors (benchmarks/run.py exits
+# nonzero when any bench raises).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+TAG="${BENCH_TAG:-ci}"
+echo "== fast benches (engine, roofline) =="
+python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json"
+
+echo "== ci.sh OK =="

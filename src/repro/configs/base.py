@@ -97,6 +97,12 @@ class ArchConfig:
     ssm_chunk: int = 128          # selective-scan chunk
     # the paper's technique
     sparsity: Optional[SparsityConfig] = None
+    # execution engine for pre-defined-sparse linears:
+    #   "pallas" — fused edge-bundle Pallas kernels (TPU; interpret off-TPU)
+    #   "jnp"    — gather+einsum fallback (dry-run FLOP accounting, CPU)
+    #   "auto"   — pallas on TPU backends, jnp elsewhere (default)
+    # resolved once at step-build time (train/steps.py, serve/engine.py)
+    engine: str = "auto"
 
     # ---------------------------------------------------------------- helpers
     @property

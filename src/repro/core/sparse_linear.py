@@ -5,11 +5,18 @@ Storage follows the paper's edge-centric layout: weights live as dense
 exactly like the FPGA's z-wide weight memories indexed through the
 interleaver.  Three apply paths:
 
-* ``apply_jnp``      — gather + einsum, pure jnp.  Used for lowering/dry-run
-                       (correct FLOP accounting) and CPU tests.
-* ``apply_kernel``   — Pallas ``block_sparse_matmul`` (kernels/), TPU target.
-* dense fallback     — when a SparsityConfig does not apply (density 1.0,
-                       dims not tileable), an ordinary dense matmul.
+* ``engine="jnp"``    — gather + einsum, pure jnp.  Used for lowering/dry-run
+                        (correct FLOP accounting) and CPU tests.
+* ``engine="pallas"`` — the fused edge-bundle Pallas engine
+                        (kernels/block_sparse_matmul.py): kb reduction +
+                        bias + activation in one kernel, custom_vjp through
+                        the fused dx/dw kernels.  TPU target; interpret
+                        mode off-TPU (tests).
+* ``engine="auto"``   — pallas on TPU backends, jnp elsewhere.  This is
+                        the default the whole stack runs through
+                        (ArchConfig.engine -> models -> train/serve).
+* dense fallback      — when a SparsityConfig does not apply (density 1.0,
+                        dims not tileable), an ordinary dense matmul.
 
 The neuron-level interleaver composes with the block pattern as a static
 permutation — on TPU a layout choice, not a runtime cost (XLA folds static
@@ -109,24 +116,43 @@ def apply_dense(params: Params, x: jax.Array) -> jax.Array:
     return y
 
 
-def apply(params: Params, x: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+def resolve_engine(engine: str) -> str:
+    """'auto' -> 'pallas' on TPU backends, 'jnp' elsewhere.  Resolve once
+    at step-build time (train/steps.py) so the traced graph is stable."""
+    from repro.kernels import ops  # local import: kernels optional at runtime
+    return ops.resolve_engine(engine)
+
+
+def _with_act(y: jax.Array, act: str) -> jax.Array:
+    """Epilogue for the jnp/dense paths — the single activation table the
+    Pallas engine fuses, so the engines can never diverge formula-wise."""
+    if act == "none":
+        return y
+    from repro.kernels import block_sparse_matmul as bsm
+    return bsm.act_fwd(y, act).astype(y.dtype)
+
+
+def apply(params: Params, x: jax.Array, *, engine: str = "auto",
+          act: str = "none") -> jax.Array:
+    """y = act(x @ W + b) through the configured execution engine."""
     if not is_sparse(params):
-        return apply_dense(params, x)
-    if use_kernel:
+        return _with_act(apply_dense(params, x), act)
+    if resolve_engine(engine) == "pallas":
         from repro.kernels import ops  # local import: kernels optional at runtime
         return ops.block_sparse_matmul(
             x, params["w"], params["idx"], params["rev_ob"], params["rev_t"],
-            params["rev_cnt"], bias=params.get("b"))
-    return apply_jnp(params, x)
+            params["rev_cnt"], bias=params.get("b"), act=act)
+    return _with_act(apply_jnp(params, x), act)
 
 
 def density(params: Params) -> float:
     if not is_sparse(params):
         return 1.0
-    w = params["w"]
-    nob, kb, bs, _ = w.shape
-    idx = params["idx"]
-    n_in_blocks = int(jnp.max(idx)) + 1 if hasattr(idx, "max") else idx.max() + 1
+    kb = params["w"].shape[1]
+    # rev_ob's leading dim IS n_in_blocks (built per input block by
+    # reverse_block_pattern) — a static shape, so no host sync in jitted
+    # contexts, and exact even when the highest input block is unused.
+    n_in_blocks = params["rev_ob"].shape[0]
     return kb / n_in_blocks
 
 

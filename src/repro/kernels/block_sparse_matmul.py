@@ -1,24 +1,37 @@
 """Pallas TPU kernels for pre-defined block-sparse matmul — the paper's
-edge processing on the MXU.
+edge processing on the MXU, as a *fused edge-bundle engine*.
 
-The FPGA processes z edges/cycle against z clash-free memory banks; here
-one grid step processes one (128 x 128) edge-bundle as a dense MXU matmul,
-and the clash-freedom property becomes the balanced block pattern: every
-output tile has exactly ``kb`` bundles (fixed fan-in) and every input tile
-feeds exactly ``fb`` bundles (fixed fan-out), so *every grid step does
-identical work* — no load imbalance, no indirection stalls.
+The FPGA processes z clash-free edges/cycle against banked weight memories
+and fuses FF/BP/UP into one pipeline.  Here the analogue is:
 
-The block index arrays ride in as scalar-prefetch operands so the x/w
-BlockSpec index_maps can depend on them (the TPU DMA engine resolves the
-gather at tile granularity — the paper's interleaver in BlockSpec form).
+* **forward** — grid ``(M/bm, nob/bn)``: one step computes ``bn`` output
+  tiles.  The whole ``kb`` fan-in reduction runs *inside* the kernel body
+  against an fp32 VMEM scratch accumulator (no read-modify-write through
+  the output ref, no revisiting), and the bias + activation epilogue (the
+  paper's FF-stage sigmoid fused into the edge pipeline) is applied before
+  the single output write.  The activation row block ``[bm, nib*bs]``
+  stays resident in VMEM across the ``nob/bn`` bundle steps — the banked
+  activation memory — while weight bundles stream through; the block
+  index array rides in as a scalar-prefetch operand and drives in-kernel
+  dynamic slices (the interleaver in SMEM).
+* **dx** — grid ``(M/bm, nib)``: the reverse (fan-out) pattern reduction
+  over ``fb`` runs in-body with the ragged valid-count mask applied per
+  slot.  The activation gradient is recomputed in the prologue from the
+  saved residual (output y, or pre-activation s for silu/gelu), so the
+  elementwise grad tensor ``dz`` never materializes in HBM.
+* **dw** — grid ``(nob, M/bm)`` with the M reduction innermost into fp32
+  VMEM scratch, written once on the last step.  The ``kb`` gathered input
+  blocks arrive through scalar-prefetch-driven BlockSpec index_maps (the
+  interleaver as DMA descriptor), and the bias gradient accumulates in
+  the same pass.
 
-Grids iterate the reduction dim innermost and accumulate into the output
-block (revisiting), the canonical Pallas TPU pattern.  VMEM per step:
-3 tiles of (bm x 128) + (128 x 128) — bounded and hardware-aligned.
+Tile sizes come from ``choose_tiles`` — a small autotune table keyed on
+``(M, nob, kb, bs)`` with a VMEM-budget heuristic fallback (see
+ROADMAP.md "Kernel engine" for the table format).
 """
 from __future__ import annotations
 
-import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -28,128 +41,321 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BM = 128
 
+# Activations whose gradient needs the pre-activation s (saved as a second
+# forward output); the rest reconstruct the gradient from y itself.
+ACT_NEEDS_PRE = ("silu", "gelu")
+ACTIVATIONS = ("none", "relu", "sigmoid", "silu", "gelu")
+
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+_GELU_A = 0.044715
+
+
+def act_fwd(s, act: str):
+    """Epilogue activation on the fp32 accumulator.  gelu is the tanh
+    approximation — the same formula jax.nn.gelu(approximate=True) uses,
+    so engine="pallas" and engine="jnp" agree bit-for-bit in structure."""
+    if act == "none":
+        return s
+    if act == "relu":
+        return jnp.maximum(s, 0.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(s)
+    if act == "silu":
+        return s * jax.nn.sigmoid(s)
+    if act == "gelu":
+        u = _GELU_C * (s + _GELU_A * s * s * s)
+        return 0.5 * s * (1.0 + jnp.tanh(u))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def act_bwd(res, act: str):
+    """d act/d s from the residual: y for relu/sigmoid, s for silu/gelu."""
+    if act == "none":
+        return None  # caller skips the multiply entirely
+    if act == "relu":
+        return (res > 0.0).astype(jnp.float32)
+    if act == "sigmoid":
+        return res * (1.0 - res)
+    if act == "silu":
+        sg = jax.nn.sigmoid(res)
+        return sg * (1.0 + res * (1.0 - sg))
+    if act == "gelu":
+        s = res
+        u = _GELU_C * (s + _GELU_A * s * s * s)
+        t = jnp.tanh(u)
+        du = _GELU_C * (1.0 + 3.0 * _GELU_A * s * s)
+        return 0.5 * (1.0 + t) + 0.5 * s * (1.0 - t * t) * du
+    raise ValueError(f"unknown activation {act!r}")
+
+
+# ------------------------------------------------------------- tile tuning
+VMEM_BUDGET = 8 * 1024 * 1024   # conservative per-kernel working-set bound
+MAX_BN = 8
+
+# Autotune table: (M, nob, kb, bs) -> (bm, bn).  Entries are measured on
+# real hardware and override the heuristic; the benchmark JSON artifacts
+# (BENCH_*.json) are the data source for adding entries.
+TUNE_TABLE: dict[tuple[int, int, int, int], tuple[int, int]] = {
+    # paper MNIST junction (12544-sample epoch, 1024->512 @ kb=2, bs=128)
+    (12544, 4, 2, 128): (512, 4),
+    # transformer FFN up-projection bench shape (1024->4096 @ kb=2, bs=128)
+    (4096, 32, 2, 128): (256, 8),
+}
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _choose_bm(M: int, row_blocks: int, bs: int, itemsize: int) -> int:
+    """Largest row-tile (multiple of 16 sublanes) whose resident row block
+    ``[bm, row_blocks*bs]`` fits half the VMEM budget."""
+    row_bytes = max(1, row_blocks * bs * itemsize)
+    bm = 512
+    while bm > 16 and bm * row_bytes > VMEM_BUDGET // 2:
+        bm //= 2
+    return max(16, min(bm, _round_up(M, 16)))
+
+
+def choose_tiles(M: int, nob: int, kb: int, bs: int, nib: int,
+                 itemsize: int = 4) -> tuple[int, int]:
+    """(bm, bn) for the fused forward: autotune table first, then a VMEM
+    heuristic — bm bounded by the resident x row block, bn the largest
+    power-of-two divisor of nob whose weight bundle fits 2 MB."""
+    hit = TUNE_TABLE.get((M, nob, kb, bs))
+    if hit is not None:
+        bm, bn = hit
+        return max(16, min(bm, _round_up(M, 16))), bn
+    bm = _choose_bm(M, nib, bs, itemsize)
+    bn = 1
+    while (bn < MAX_BN and nob % (2 * bn) == 0
+           and 2 * bn * kb * bs * bs * itemsize <= 2 * 1024 * 1024):
+        bn *= 2
+    return bm, bn
+
+
+def fwd_grid(M: int, nob: int, kb: int, bs: int, nib: int,
+             itemsize: int = 4) -> tuple[int, int]:
+    """Grid of the fused forward for padded row count M — the acceptance
+    bound: exactly (M/bm) * (nob/bn) steps, kb fully in-kernel."""
+    bm, bn = choose_tiles(M, nob, kb, bs, nib, itemsize)
+    return (_round_up(M, bm) // bm, nob // bn)
+
 
 # ------------------------------------------------------------------ forward
-def _fwd_kernel(idx_ref, x_ref, w_ref, o_ref):
-    k = pl.program_id(2)
-    part = jnp.dot(x_ref[...], w_ref[0, 0],
-                   preferred_element_type=jnp.float32)
+def fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
+        bn: int | None = None, save_pre: bool = False,
+        interpret: bool = False):
+    """x [M, nib*bs], w [nob, kb, bs, bs], idx [nob, kb], bias [nob*bs]
+    -> act(x @ W_sparse + bias) [M, nob*bs] (+ pre-activation if save_pre).
 
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = part.astype(o_ref.dtype)
-
-    @pl.when(k != 0)
-    def _acc():
-        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
-
-
-def fwd(x, w, idx, *, bm: int = DEFAULT_BM, interpret: bool = False):
-    """x [M, nib*bs], w [nob, kb, bs, bs], idx [nob, kb] -> [M, nob*bs]."""
+    One grid step = one (row-tile x output-bundle): kb fan-in slots reduced
+    in-body into fp32 VMEM scratch, epilogue fused, single output write.
+    """
     M = x.shape[0]
     nob, kb, bs, _ = w.shape
+    nib = x.shape[1] // bs
+    cbm, cbn = choose_tiles(M, nob, kb, bs, nib, x.dtype.itemsize)
+    bm = cbm if bm is None else bm
+    bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
     assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
-    grid = (M // bm, nob, kb)
-    return pl.pallas_call(
-        _fwd_kernel,
+
+    def kernel(idx_ref, x_ref, w_ref, b_ref, *rest):
+        acc_ref = rest[-1]
+        o_ref = rest[0]
+        ob0 = pl.program_id(1) * bn
+        for j in range(bn):
+            acc = jnp.zeros((bm, bs), jnp.float32)
+            for k in range(kb):
+                ib = idx_ref[ob0 + j, k]
+                xk = x_ref[:, pl.ds(ib * bs, bs)]
+                acc = acc + jnp.dot(xk, w_ref[j, k],
+                                    preferred_element_type=jnp.float32)
+            acc_ref[:, j * bs:(j + 1) * bs] = acc
+        s = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if save_pre:
+            rest[1][...] = s.astype(rest[1].dtype)
+        o_ref[...] = act_fwd(s, act).astype(o_ref.dtype)
+
+    out_shape = [jax.ShapeDtypeStruct((M, nob * bs), x.dtype)]
+    out_specs = [pl.BlockSpec((bm, bn * bs), lambda m, o, idx: (m, o))]
+    if save_pre:
+        out_shape.append(jax.ShapeDtypeStruct((M, nob * bs), x.dtype))
+        out_specs.append(pl.BlockSpec((bm, bn * bs), lambda m, o, idx: (m, o)))
+
+    outs = pl.pallas_call(
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=grid,
+            grid=(M // bm, nob // bn),
             in_specs=[
-                pl.BlockSpec((bm, bs), lambda m, o, k, idx: (m, idx[o, k])),
-                pl.BlockSpec((1, 1, bs, bs), lambda m, o, k, idx: (o, k, 0, 0)),
+                # full activation row block, resident across bundle steps
+                pl.BlockSpec((bm, nib * bs), lambda m, o, idx: (m, 0)),
+                pl.BlockSpec((bn, kb, bs, bs), lambda m, o, idx: (o, 0, 0, 0)),
+                pl.BlockSpec((1, bn * bs), lambda m, o, idx: (0, o)),
             ],
-            out_specs=pl.BlockSpec((bm, bs), lambda m, o, k, idx: (m, o)),
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((bm, bn * bs), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((M, nob * bs), x.dtype),
+        out_shape=out_shape,
         interpret=interpret,
-    )(idx, x, w)
+    )(idx, x, w, bias.reshape(1, -1))
+    return (outs[0], outs[1]) if save_pre else (outs[0], None)
 
 
 # ------------------------------------------------------------------ dx
-def _dx_kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, dy_ref, w_ref, o_ref):
-    i = pl.program_id(1)
-    f = pl.program_id(2)
-    # dy block [bm, bs] @ w[ob, t]^T ; padded reverse slots (ragged fan-out)
-    # contribute zero via the valid-count mask
-    valid = (f < rev_cnt_ref[i]).astype(jnp.float32)
-    part = jnp.dot(dy_ref[...], w_ref[0, 0].T,
-                   preferred_element_type=jnp.float32) * valid
+def dx(dy, wrT, rev_ob, rev_cnt, res, *, act: str = "none",
+       bm: int | None = None, interpret: bool = False):
+    """dy [M, nob*bs] -> dx [M, nib*bs] via the reverse (fan-out) pattern.
 
-    @pl.when(f == 0)
-    def _init():
-        o_ref[...] = part.astype(o_ref.dtype)
-
-    @pl.when(f != 0)
-    def _acc():
-        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
-
-
-def dx(dy, w, rev_ob, rev_t, rev_cnt, *, bm: int = DEFAULT_BM,
-       interpret: bool = False):
-    """dy [M, nob*bs] -> dx [M, nib*bs] via the reverse (fan-out) pattern —
-    balanced by construction (to +-1 for ragged densities), so the backward
-    grid is as regular as the forward (the paper's equal-contribution
-    invariant, eq. (2b))."""
+    wrT [nib, fb, bs, bs] is the reverse-gathered, pre-transposed weight
+    bundle (wrT[i, f] = w[rev_ob[i,f], rev_t[i,f]].T).  The fb reduction
+    runs in-body with the ragged valid-count mask; the activation gradient
+    is recomputed per dy block from the residual (fused epilogue grad)."""
     M = dy.shape[0]
-    nib, fb = rev_ob.shape
-    nob, kb, bs, _ = w.shape
+    nib, fb, bs, _ = wrT.shape
+    nob = dy.shape[1] // bs
+    has_res = act != "none"
+    row_blocks = nob * (2 if has_res else 1)
+    if bm is None:
+        # M arrives pre-padded by the forward's bm (a multiple of 16);
+        # gcd keeps our (possibly different) choice an exact divisor
+        bm = math.gcd(_choose_bm(M, row_blocks, bs, dy.dtype.itemsize), M)
     assert M % bm == 0
-    grid = (M // bm, nib, fb)
+
+    def kernel(rev_ob_ref, rev_cnt_ref, *refs):
+        if has_res:
+            dy_ref, res_ref, wrt_ref, o_ref = refs
+        else:
+            dy_ref, wrt_ref, o_ref = refs
+        i = pl.program_id(1)
+        cnt = rev_cnt_ref[i]
+        acc = jnp.zeros((bm, bs), jnp.float32)
+        for f in range(fb):
+            ob = rev_ob_ref[i, f]
+            dyb = dy_ref[:, pl.ds(ob * bs, bs)]
+            if has_res:
+                g = act_bwd(res_ref[:, pl.ds(ob * bs, bs)].astype(jnp.float32),
+                            act)
+                dz = (dyb.astype(jnp.float32) * g).astype(dyb.dtype)
+            else:
+                dz = dyb
+            part = jnp.dot(dz, wrt_ref[0, f],
+                           preferred_element_type=jnp.float32)
+            valid = (f < cnt).astype(jnp.float32)
+            acc = acc + part * valid
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+    in_specs = [pl.BlockSpec((bm, nob * bs), lambda m, i, rob, rc: (m, 0))]
+    inputs = [dy]
+    if has_res:
+        in_specs.append(pl.BlockSpec((bm, nob * bs),
+                                     lambda m, i, rob, rc: (m, 0)))
+        inputs.append(res)
+    in_specs.append(pl.BlockSpec((1, fb, bs, bs),
+                                 lambda m, i, rob, rc: (i, 0, 0, 0)))
+    inputs.append(wrT)
+
     return pl.pallas_call(
-        _dx_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bs),
-                             lambda m, i, f, rob, rt, rc: (m, rob[i, f])),
-                pl.BlockSpec((1, 1, bs, bs),
-                             lambda m, i, f, rob, rt, rc: (rob[i, f], rt[i, f], 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((bm, bs),
-                                   lambda m, i, f, rob, rt, rc: (m, i)),
+            num_scalar_prefetch=2,
+            grid=(M // bm, nib),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bs), lambda m, i, rob, rc: (m, i)),
         ),
         out_shape=jax.ShapeDtypeStruct((M, nib * bs), dy.dtype),
         interpret=interpret,
-    )(rev_ob, rev_t, rev_cnt, dy, w)
+    )(rev_ob, rev_cnt, *inputs)
 
 
-# ------------------------------------------------------------------ dw
-def _dw_kernel(idx_ref, x_ref, dy_ref, o_ref):
-    m = pl.program_id(2)
-    part = jnp.dot(x_ref[...].T, dy_ref[...],
-                   preferred_element_type=jnp.float32)
-
-    @pl.when(m == 0)
-    def _init():
-        o_ref[...] = part[None, None].astype(o_ref.dtype)
-
-    @pl.when(m != 0)
-    def _acc():
-        o_ref[...] = (o_ref[...].astype(jnp.float32)
-                      + part[None, None]).astype(o_ref.dtype)
-
-
-def dw(x, dy, idx, *, bm: int = DEFAULT_BM, interpret: bool = False):
-    """dw [nob, kb, bs, bs] — reduction over M tiles innermost."""
+# ------------------------------------------------------------------ dw (+db)
+def dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
+       bm: int | None = None, interpret: bool = False):
+    """(dw [nob, kb, bs, bs] fp32, db [nob*bs] fp32 or None) — the M
+    reduction runs innermost into fp32 VMEM scratch (single output write
+    per output block, no read-modify-write).  The kb gathered input blocks
+    arrive through scalar-prefetch BlockSpec index_maps — the interleaver
+    as a DMA descriptor — and, for biased layers, db accumulates from the
+    same fused dz prologue (with_bias=False skips it entirely)."""
     M = x.shape[0]
     nob, kb = idx.shape
     bs = dy.shape[1] // nob
+    has_res = act != "none"
+    if bm is None:
+        bm = math.gcd(_choose_bm(M, kb + 3, bs, x.dtype.itemsize), M)
     assert M % bm == 0
-    grid = (nob, kb, M // bm)
-    return pl.pallas_call(
-        _dw_kernel,
+    nm = M // bm
+
+    def kernel(idx_ref, *refs):
+        n_in = (2 if has_res else 1) + kb
+        dy_ref = refs[0]
+        res_ref = refs[1] if has_res else None
+        x_refs = refs[n_in - kb:n_in]
+        if with_bias:
+            dw_ref, db_ref, accw_ref, accb_ref = refs[n_in:]
+        else:
+            dw_ref, accw_ref = refs[n_in:]
+        m = pl.program_id(1)
+
+        @pl.when(m == 0)
+        def _zero():
+            accw_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+            if with_bias:
+                accb_ref[...] = jnp.zeros((1, bs), jnp.float32)
+
+        if has_res:
+            g = act_bwd(res_ref[...].astype(jnp.float32), act)
+            dzf = dy_ref[...].astype(jnp.float32) * g
+            dz = dzf.astype(dy_ref.dtype)
+        else:
+            dzf = None
+            dz = dy_ref[...]
+        for k in range(kb):
+            accw_ref[k] = accw_ref[k] + jnp.dot(
+                x_refs[k][...].T, dz, preferred_element_type=jnp.float32)
+        if with_bias:
+            s = dzf if dzf is not None else dy_ref[...].astype(jnp.float32)
+            accb_ref[...] = accb_ref[...] + jnp.sum(s, axis=0, keepdims=True)
+
+        @pl.when(m == nm - 1)
+        def _flush():
+            dw_ref[...] = accw_ref[...][None]
+            if with_bias:
+                db_ref[...] = accb_ref[...]
+
+    in_specs = [pl.BlockSpec((bm, bs), lambda o, m, idx: (m, o))]
+    inputs = [dy]
+    if has_res:
+        in_specs.append(pl.BlockSpec((bm, bs), lambda o, m, idx: (m, o)))
+        inputs.append(res)
+    for k in range(kb):
+        in_specs.append(pl.BlockSpec(
+            (bm, bs), lambda o, m, idx, k=k: (m, idx[o, k])))
+        inputs.append(x)
+
+    out_specs = [pl.BlockSpec((1, kb, bs, bs), lambda o, m, idx: (o, 0, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((nob, kb, bs, bs), jnp.float32)]
+    scratch = [pltpu.VMEM((kb, bs, bs), jnp.float32)]
+    if with_bias:
+        out_specs.append(pl.BlockSpec((1, bs), lambda o, m, idx: (o, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nob, bs), jnp.float32))
+        scratch.append(pltpu.VMEM((1, bs), jnp.float32))
+
+    outs = pl.pallas_call(
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bs), lambda o, k, m, idx: (m, idx[o, k])),
-                pl.BlockSpec((bm, bs), lambda o, k, m, idx: (m, o)),
-            ],
-            out_specs=pl.BlockSpec((1, 1, bs, bs),
-                                   lambda o, k, m, idx: (o, k, 0, 0)),
+            grid=(nob, nm),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
         ),
-        out_shape=jax.ShapeDtypeStruct((nob, kb, bs, bs), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
-    )(idx, x, dy)
+    )(idx, *inputs)
+    if with_bias:
+        return outs[0], outs[1].reshape(-1)
+    return outs[0], None

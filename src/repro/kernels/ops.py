@@ -1,14 +1,25 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``block_sparse_matmul`` carries a custom_vjp wired to the dx/dw kernels —
-the full paper pipeline (FF eq. (1), BP eq. (2), UP gradient of eq. (3))
-runs through Pallas.  Kernels execute in interpret mode off-TPU (the
-container is CPU-only); on TPU set ``interpret=False`` (the default
-auto-detects the backend).
+``block_sparse_matmul`` carries a custom_vjp wired to the fused dx/dw
+kernels — the full paper pipeline (FF eq. (1) with the activation fused
+into the edge pipeline, BP eq. (2), UP gradient of eq. (3)) runs through
+Pallas.  The activation gradient is recomputed inside the backward
+kernels' prologues from the saved residual (y, or the pre-activation for
+silu/gelu), so the elementwise grad tensor never round-trips HBM.
+
+Kernels execute in interpret mode off-TPU (the container is CPU-only);
+on TPU ``interpret=False`` (the default auto-detects the backend).
+
+``resolve_engine`` maps the config-level ``engine`` switch
+("pallas" | "jnp" | "auto") to a concrete path: auto picks the Pallas
+engine on TPU backends and the jnp gather+einsum fallback elsewhere
+(interpret-mode Pallas is an emulator — correct, but only suitable for
+tests; CPU *tests* opt in with engine="pallas" explicitly).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +33,15 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_engine(engine: str) -> str:
+    """'auto' -> 'pallas' on TPU backends, 'jnp' elsewhere."""
+    if engine in ("pallas", "jnp"):
+        return engine
+    if engine == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    raise ValueError(f"unknown engine {engine!r} (pallas | jnp | auto)")
+
+
 def _pad_rows(x, bm):
     M = x.shape[0]
     pad = (-M) % bm
@@ -31,37 +51,73 @@ def _pad_rows(x, bm):
 
 
 # ------------------------------------------------------------ block sparse
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
-def _bsm_core(x, w, idx, rev_ob, rev_t, rev_cnt, interpret):
-    return bsm.fwd(x, w, idx, interpret=interpret)
+class _Spec(NamedTuple):
+    """Static (hashable) kernel configuration for the custom_vjp."""
+    act: str
+    bm: int
+    bn: int
+    interpret: bool
+    has_bias: bool
 
 
-def _bsm_fwd(x, w, idx, rev_ob, rev_t, rev_cnt, interpret):
-    y = bsm.fwd(x, w, idx, interpret=interpret)
-    return y, (x, w, idx, rev_ob, rev_t, rev_cnt)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _bsm_core(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
+    y, _ = bsm.fwd(x, w, idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
+                   save_pre=False, interpret=spec.interpret)
+    return y
 
 
-def _bsm_bwd(interpret, res, dy):
-    x, w, idx, rev_ob, rev_t, rev_cnt = res
-    dxv = bsm.dx(dy, w, rev_ob, rev_t, rev_cnt, interpret=interpret)
-    dwv = bsm.dw(x, dy, idx, interpret=interpret).astype(w.dtype)
-    return dxv, dwv, None, None, None, None
+def _bsm_fwd(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
+    needs_pre = spec.act in bsm.ACT_NEEDS_PRE
+    y, pre = bsm.fwd(x, w, idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
+                     save_pre=needs_pre, interpret=spec.interpret)
+    res = pre if needs_pre else (y if spec.act != "none" else None)
+    return y, (x, w, res, idx, rev_ob, rev_t, rev_cnt)
+
+
+def _bsm_bwd(spec, saved, dy):
+    x, w, res, idx, rev_ob, rev_t, rev_cnt = saved
+    # reverse-gathered, pre-transposed weight bundles: one XLA tile-gather
+    # per backward call (w-sized traffic, dominated by the activation
+    # streams the kernels save by fusing dz).
+    wrT = jnp.swapaxes(w[rev_ob, rev_t], -1, -2).astype(dy.dtype)
+    dxv = bsm.dx(dy, wrT, rev_ob, rev_cnt, res, act=spec.act,
+                 interpret=spec.interpret)
+    dwv, dbv = bsm.dw(x, dy, idx, res, act=spec.act,
+                      with_bias=spec.has_bias, interpret=spec.interpret)
+    if dbv is None:  # bias-free layer: the zero-bias operand gets zeros
+        dbv = jnp.zeros((dy.shape[1],), jnp.float32)
+    return dxv, dwv.astype(w.dtype), dbv, None, None, None, None
 
 
 _bsm_core.defvjp(_bsm_fwd, _bsm_bwd)
 
 
 def block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,
-                        interpret: bool | None = None):
-    """x [..., n_in] -> [..., n_out] through the pre-defined block pattern."""
+                        act: str = "none", interpret: bool | None = None,
+                        bm: int | None = None, bn: int | None = None):
+    """x [..., n_in] -> act(x @ W_sparse + bias) [..., n_out] through the
+    pre-defined block pattern, bias + activation fused into the kernel
+    epilogue."""
     interpret = _auto_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
-    x2, M = _pad_rows(x.reshape(-1, x.shape[-1]), bsm.DEFAULT_BM)
-    y = _bsm_core(x2, w.astype(x.dtype), idx, rev_ob, rev_t, rev_cnt, interpret)
-    y = y[:M].reshape(*lead, -1)
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    return y
+    nob, kb, bs, _ = w.shape
+    nib = x.shape[-1] // bs
+    x2 = x.reshape(-1, x.shape[-1])
+    if bm is None or bn is None:
+        cbm, cbn = bsm.choose_tiles(x2.shape[0], nob, kb, bs, nib,
+                                    x.dtype.itemsize)
+        bm = cbm if bm is None else bm
+        bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    x2, M = _pad_rows(x2, bm)
+    b = (jnp.zeros((nob * bs,), x.dtype) if bias is None
+         else bias.astype(x.dtype))
+    spec = _Spec(act=act, bm=bm, bn=bn, interpret=interpret,
+                 has_bias=bias is not None)
+    y = _bsm_core(spec, x2, w.astype(x.dtype), b, idx, rev_ob, rev_t, rev_cnt)
+    return y[:M].reshape(*lead, -1)
 
 
 # ------------------------------------------------------------ fixed point

@@ -19,6 +19,7 @@ Results land in ``results/dryrun/<cell>.json`` and are skipped when present
 """
 
 import argparse
+import dataclasses
 import functools
 import json
 import time
@@ -143,7 +144,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
     out_path = out_dir / f"{cid}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
-    cfg = _apply_variant(registry.get(arch), variant)
+    # force the jnp gather+einsum path: the dry-run exists for FLOP/bytes
+    # accounting, which must see the density-scaled einsums, not opaque
+    # pallas_call ops the roofline walker can't cost
+    cfg = dataclasses.replace(_apply_variant(registry.get(arch), variant),
+                              engine="jnp")
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_chips = mesh.devices.size

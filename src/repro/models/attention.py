@@ -159,10 +159,10 @@ def gqa_forward(p: Params, x, cfg: ArchConfig, *, positions, causal=True,
     """
     B, S, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
-    q = _split_heads(sl.apply(p["wq"], x), H, hd)
+    q = _split_heads(sl.apply(p["wq"], x, engine=cfg.engine), H, hd)
     if kv_override is None:
-        k = _split_heads(sl.apply(p["wk"], x), Hkv, hd)
-        v = _split_heads(sl.apply(p["wv"], x), Hkv, hd)
+        k = _split_heads(sl.apply(p["wk"], x, engine=cfg.engine), Hkv, hd)
+        v = _split_heads(sl.apply(p["wv"], x, engine=cfg.engine), Hkv, hd)
         if cfg.family != "audio":  # whisper uses absolute positions, no rope
             q = rope(q, positions, cfg.rope_theta, cfg.partial_rotary)
             k = rope(k, positions, cfg.rope_theta, cfg.partial_rotary)
@@ -173,7 +173,7 @@ def gqa_forward(p: Params, x, cfg: ArchConfig, *, positions, causal=True,
     kv_pos = positions if kv_override is None else None
     out = chunked_attention(q, k, v, causal=causal, window=window,
                             chunk=cfg.attn_chunk, q_pos=positions, kv_pos=kv_pos)
-    out = sl.apply(p["wo"], out.reshape(B, S, H * hd))
+    out = sl.apply(p["wo"], out.reshape(B, S, H * hd), engine=cfg.engine)
     return out, (k, v)
 
 
@@ -186,10 +186,10 @@ def gqa_decode(p: Params, x, cfg: ArchConfig, cache: dict, pos,
     """
     B = x.shape[0]
     H, Hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
-    q = _split_heads(sl.apply(p["wq"], x), H, hd)
+    q = _split_heads(sl.apply(p["wq"], x, engine=cfg.engine), H, hd)
     if not cross:
-        k_new = _split_heads(sl.apply(p["wk"], x), Hkv, hd)
-        v_new = _split_heads(sl.apply(p["wv"], x), Hkv, hd)
+        k_new = _split_heads(sl.apply(p["wk"], x, engine=cfg.engine), Hkv, hd)
+        v_new = _split_heads(sl.apply(p["wv"], x, engine=cfg.engine), Hkv, hd)
         if cfg.family != "audio":
             pos_arr = jnp.full((1,), pos)
             q = rope(q, pos_arr, cfg.rope_theta, cfg.partial_rotary)
@@ -206,7 +206,7 @@ def gqa_decode(p: Params, x, cfg: ArchConfig, cache: dict, pos,
         S = cache["k"].shape[1]
         out = decode_attention(q, cache["k"], cache["v"], jnp.asarray(S - 1))
         new_cache = cache
-    out = sl.apply(p["wo"], out.reshape(B, 1, H * hd))
+    out = sl.apply(p["wo"], out.reshape(B, 1, H * hd), engine=cfg.engine)
     return out, new_cache
 
 
@@ -219,7 +219,7 @@ def mla_forward(p: Params, x, cfg: ArchConfig, *, positions):
     m, H = cfg.mla, cfg.n_heads
     nope, rd, vd, lora = (m.qk_nope_head_dim, m.qk_rope_head_dim,
                           m.v_head_dim, m.kv_lora_rank)
-    q = _split_heads(sl.apply(p["wq"], x), H, nope + rd)
+    q = _split_heads(sl.apply(p["wq"], x, engine=cfg.engine), H, nope + rd)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
@@ -236,7 +236,7 @@ def mla_forward(p: Params, x, cfg: ArchConfig, *, positions):
     v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rd - vd)))
     out = chunked_attention(qf, k, v_pad, causal=True, chunk=cfg.attn_chunk,
                             q_pos=positions, kv_pos=positions)[..., :vd]
-    out = sl.apply(p["wo"], out.reshape(B, S, H * vd))
+    out = sl.apply(p["wo"], out.reshape(B, S, H * vd), engine=cfg.engine)
     return out, (latent, k_rope[:, :, 0, :])
 
 
@@ -247,7 +247,7 @@ def mla_decode(p: Params, x, cfg: ArchConfig, cache: dict, pos):
     m, H = cfg.mla, cfg.n_heads
     nope, rd, vd, lora = (m.qk_nope_head_dim, m.qk_rope_head_dim,
                           m.v_head_dim, m.kv_lora_rank)
-    q = _split_heads(sl.apply(p["wq"], x), H, nope + rd)
+    q = _split_heads(sl.apply(p["wq"], x, engine=cfg.engine), H, nope + rd)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     pos_arr = jnp.full((1,), pos)
     q_rope = rope(q_rope, pos_arr, cfg.rope_theta)
@@ -272,5 +272,5 @@ def mla_decode(p: Params, x, cfg: ArchConfig, cache: dict, pos):
     pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bhqs,bsl->bqhl", pr, lat)
     out = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv)
-    out = sl.apply(p["wo"], out.reshape(B, 1, H * vd))
+    out = sl.apply(p["wo"], out.reshape(B, 1, H * vd), engine=cfg.engine)
     return out, {"latent": lat, "k_rope": kr}

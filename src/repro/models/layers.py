@@ -110,9 +110,14 @@ def mlp_init(key, cfg: ArchConfig, d_ff: int | None = None, dtype=jnp.float32,
 
 
 def mlp_apply(p, x, cfg: ArchConfig):
-    h = sl.apply(p["wi"], x)
+    """The activation rides as a fused epilogue of the producing linear —
+    on the Pallas engine it runs inside the kernel (the paper's FF-stage
+    activation fused into the edge pipeline); on the jnp/dense paths it is
+    the same formula applied after the matmul."""
+    eng = cfg.engine
     if "wg" in p:
-        h = jax.nn.silu(sl.apply(p["wg"], x)) * h
+        g = sl.apply(p["wg"], x, engine=eng, act="silu")
+        h = g * sl.apply(p["wi"], x, engine=eng)
     else:
-        h = jax.nn.gelu(h)
-    return sl.apply(p["wo"], h)
+        h = sl.apply(p["wi"], x, engine=eng, act="gelu")
+    return sl.apply(p["wo"], h, engine=eng)

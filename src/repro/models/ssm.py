@@ -74,7 +74,7 @@ def mamba1_apply(p: Params, x, cfg: ArchConfig, cache: dict | None = None,
     """x [B,S,d_model] -> (y, new_cache).  Cache: conv [B,K-1,di], ssm [B,di,N]."""
     B, S, _ = x.shape
     di, N, R = cfg.d_inner_, cfg.ssm_state, cfg.dt_rank_
-    xz = sl.apply(p["in_proj"], x)
+    xz = sl.apply(p["in_proj"], x, engine=cfg.engine)
     xs, z = jnp.split(xz, 2, axis=-1)
 
     conv_state = cache["conv"] if cache is not None else None
@@ -127,7 +127,7 @@ def mamba1_apply(p: Params, x, cfg: ArchConfig, cache: dict | None = None,
 
     y = y + p["D"].astype(jnp.float32)[None, None] * xf
     y = y.astype(x.dtype) * jax.nn.silu(z)
-    out = sl.apply(p["out_proj"], y)
+    out = sl.apply(p["out_proj"], y, engine=cfg.engine)
     new_cache = ({"conv": new_conv, "ssm": new_ssm.astype(
         cache["ssm"].dtype if cache is not None else jnp.float32)}
         if (cache is not None or decode) else None)
@@ -169,8 +169,8 @@ def mamba2_apply(p: Params, x, cfg: ArchConfig, cache: dict | None = None,
     B, S, _ = x.shape
     di, N = cfg.d_inner_, cfg.ssm_state
     H, hd = cfg.ssm_heads, cfg.ssm_head_dim
-    z = sl.apply(p["in_z"], x)
-    xbc = sl.apply(p["in_xbc"], x)
+    z = sl.apply(p["in_z"], x, engine=cfg.engine)
+    xbc = sl.apply(p["in_xbc"], x, engine=cfg.engine)
     dt = sl.apply_dense(p["in_dt"], x)
     conv_state = cache["conv"] if cache is not None else None
     xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
@@ -231,7 +231,7 @@ def mamba2_apply(p: Params, x, cfg: ArchConfig, cache: dict | None = None,
     else:
         y = y + (p["D"].astype(jnp.float32)[None, :, None] * xh[:, 0]).reshape(B, 1, di)
     y = y.astype(x.dtype) * jax.nn.silu(z)
-    out = sl.apply(p["out_proj"], y)
+    out = sl.apply(p["out_proj"], y, engine=cfg.engine)
     new_cache = ({"conv": new_conv, "ssm": new_ssm.astype(
         cache["ssm"].dtype if cache is not None else jnp.float32)}
         if (cache is not None or decode) else None)

@@ -31,15 +31,22 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 
+def _axis_size(axis_name):
+    try:  # jax >= 0.6
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:  # jax 0.4.x
+        return jax.lax.psum(1, axis_name)
+
+
 def _shift_right(x, axis_name):
     """stage s receives from s-1 (stage 0 receives zeros)."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     perm = [(i, i + 1) for i in range(n - 1)]
     return jax.lax.ppermute(x, axis_name, perm)
 
 
 def _shift_left(x, axis_name):
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     perm = [(i + 1, i) for i in range(n - 1)]
     return jax.lax.ppermute(x, axis_name, perm)
 

@@ -27,13 +27,19 @@ class ServeConfig:
     temperature: float = 0.0
     eos_token: int = -1     # -1: never stop early
     seed: int = 0
+    # execution engine override for the sparse linears ("pallas"|"jnp"|
+    # "auto"); None keeps the ArchConfig's setting.  The step builders
+    # resolve "auto" to the Pallas engine on TPU backends.
+    engine: str | None = None
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig | None = None):
+        self.scfg = serve_cfg or ServeConfig()
+        if self.scfg.engine is not None:
+            cfg = dataclasses.replace(cfg, engine=self.scfg.engine)
         self.cfg = cfg
         self.params = params
-        self.scfg = serve_cfg or ServeConfig()
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 

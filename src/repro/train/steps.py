@@ -7,6 +7,7 @@ so the same step runs on 1 CPU device (smoke tests) or a 512-chip mesh
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -14,8 +15,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import sparse_linear as sl
 from repro.models import model as M
 from repro.optim import Optimizer
+
+
+def _resolve_engine(cfg: ArchConfig) -> ArchConfig:
+    """Pin engine="auto" to a concrete path once, at step-build time, so
+    the traced graph never depends on a backend query mid-trace and the
+    jit cache key is stable."""
+    eng = sl.resolve_engine(cfg.engine)
+    return cfg if eng == cfg.engine else dataclasses.replace(cfg, engine=eng)
 
 
 def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
@@ -25,6 +35,7 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
     With microbatches > 1 the batch is split and gradients accumulated in a
     scan — per-microbatch psums overlap with the next microbatch's compute
     (the paper's operational parallelization applied at the pod scale)."""
+    cfg = _resolve_engine(cfg)
 
     def loss(params, batch):
         if cfg.cast_params_once:
@@ -71,6 +82,8 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
 
 
 def make_prefill_step(cfg: ArchConfig):
+    cfg = _resolve_engine(cfg)
+
     def prefill(params, batch):
         logits, cache, _ = M.forward(cfg, params, batch, return_cache=True,
                                      last_only=True)
@@ -79,12 +92,16 @@ def make_prefill_step(cfg: ArchConfig):
 
 
 def make_decode_step(cfg: ArchConfig):
+    cfg = _resolve_engine(cfg)
+
     def decode(params, cache, token, pos):
         return M.decode_step(cfg, params, cache, token, pos)
     return decode
 
 
 def make_eval_step(cfg: ArchConfig):
+    cfg = _resolve_engine(cfg)
+
     def evaluate(params, batch):
         l, metrics = M.loss_fn(cfg, params, batch)
         return dict(metrics, loss=l)

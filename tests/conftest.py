@@ -8,3 +8,26 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+
+def optional_hypothesis():
+    """(given, settings, st) — real hypothesis when installed, otherwise
+    stubs that skip only the property tests (plain tests in the same
+    module still run)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        import pytest
+
+        def given(*a, **k):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        class _StrategyStub:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        return given, settings, _StrategyStub()

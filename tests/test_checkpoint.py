@@ -66,11 +66,11 @@ def test_elastic_reshard_subprocess(tmp_path):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + sys.argv[1]
         sys.path.insert(0, {str(Path(__file__).resolve().parents[1] / 'src')!r})
         import jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.train import checkpoint as C
         n = int(sys.argv[1])
-        mesh = jax.make_mesh((n,), ("data",), devices=jax.devices(),
-                             axis_types=(AxisType.Auto,))
+        from repro.launch.mesh import compat_mesh
+        mesh = compat_mesh((n,), ("data",), devices=jax.devices())
         sh = NamedSharding(mesh, P("data"))
         t = {{"w": jax.device_put(jnp.arange(32, dtype=jnp.float32), sh)}}
         if sys.argv[2] == "save":

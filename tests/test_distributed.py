@@ -19,7 +19,7 @@ def _run(ndev: int, body: str) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
         sys.path.insert(0, {SRC!r})
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.launch.mesh import compat_mesh
     """) + textwrap.dedent(body)
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, env=dict(os.environ), timeout=600)
@@ -30,8 +30,7 @@ def _run(ndev: int, body: str) -> str:
 def test_gpipe_forward_exact_and_async_converges():
     out = _run(4, """
         from repro.parallel import pipeline as PP
-        mesh = jax.make_mesh((4,), ("stage",), devices=jax.devices(),
-                             axis_types=(AxisType.Auto,))
+        mesh = compat_mesh((4,), ("stage",), devices=jax.devices())
         D = 16
         def stage_fn(p, x): return jnp.tanh(x @ p["w"] + p["b"])
         k = jax.random.PRNGKey(0)

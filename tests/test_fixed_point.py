@@ -1,7 +1,11 @@
 """Fixed-point arithmetic properties (paper Sec. III-C)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core import fixed_point as fxp
 

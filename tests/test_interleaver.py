@@ -1,7 +1,9 @@
 """Property tests for the clash-free interleavers and block patterns."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core import interleaver as il
 

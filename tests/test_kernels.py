@@ -134,3 +134,64 @@ def test_flash_attention_kernel(H, Hkv, Sq, window):
     want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vf)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------- fused engine autodiff
+def _ragged_pattern(n_in, n_out, density, bs):
+    """Pattern whose fan-out is ragged (+-1) — exercises the rev_cnt mask."""
+    pat = make_block_pattern(n_in, n_out, density, bs)
+    assert pat.rev_cnt.min() != pat.rev_cnt.max(), \
+        "shape choice no longer ragged — rev_cnt mask untested"
+    return pat
+
+
+@pytest.mark.parametrize("bs", [8, 128])
+@pytest.mark.parametrize("act", ["none", "relu", "sigmoid", "silu", "gelu"])
+def test_block_sparse_vjp_fused_epilogue(bs, act):
+    """custom_vjp (dx/dw/db through the fused kernels, activation grad
+    recomputed in the backward prologue) vs jax.grad of apply_jnp + the
+    same epilogue — ragged fan-out, non-multiple-of-bm row count."""
+    from repro.core import sparse_linear as sl
+
+    n_in, n_out = 10 * bs, 6 * bs          # nib=10, nob=6
+    pat = _ragged_pattern(n_in, n_out, 0.34, bs)   # kb=3 over nib=10: ragged
+    key = jax.random.PRNGKey(bs)
+    M = 45                                  # non-multiple of any bm
+    x = jax.random.normal(key, (M, n_in))
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (pat.n_out_blocks, pat.fan_in_blocks, bs, bs)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (n_out,)) * 0.3
+    co = jax.random.normal(jax.random.PRNGKey(3), (M, n_out))
+    idx, rob, rt, rc = (jnp.asarray(pat.idx), jnp.asarray(pat.rev_ob),
+                        jnp.asarray(pat.rev_t), jnp.asarray(pat.rev_cnt))
+
+    def f_pallas(x, w, b):
+        y = ops.block_sparse_matmul(x, w, idx, rob, rt, rc, bias=b, act=act)
+        return jnp.sum(y * co)
+
+    def f_jnp(x, w, b):
+        p = {"w": w, "idx": idx, "b": b}
+        return jnp.sum(sl._with_act(sl.apply_jnp(p, x), act) * co)
+
+    l1, g1 = jax.value_and_grad(f_pallas, (0, 1, 2))(x, w, b)
+    l2, g2 = jax.value_and_grad(f_jnp, (0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+    for got, want, name in zip(g1, g2, ("dx", "dw", "db")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3, err_msg=name)
+
+
+def test_fused_forward_grid_bound():
+    """Acceptance bound: the fused forward runs in exactly
+    (M/bm) * ceil(nob/bn) grid steps — the kb reduction never appears as a
+    grid dimension (the seed kernel's grid was (M/bm, nob, kb))."""
+    from repro.kernels import block_sparse_matmul as bsm
+
+    for (M, nob, kb, bs, nib) in [(256, 4, 2, 128, 8), (12544, 4, 2, 128, 8),
+                                  (64, 10, 3, 32, 10), (4096, 32, 2, 128, 8)]:
+        bm, bn = bsm.choose_tiles(M, nob, kb, bs, nib, 4)
+        gm, gn = bsm.fwd_grid(M, nob, kb, bs, nib, 4)
+        Mp = -(-M // bm) * bm
+        assert gm * gn <= (Mp // bm) * (-(-nob // bn)), (M, nob, kb)
+        assert nob % bn == 0 and gn == nob // bn
+        assert bm % 16 == 0 and bm >= 16
