@@ -1,6 +1,6 @@
 """Engine-comparison benchmarks: jnp gather+einsum vs fused Pallas engine.
 
-Two junction shapes anchor the perf trajectory from this PR onward:
+Three junction shapes anchor the perf trajectory from this PR onward:
 
 * ``engine.mnist.*`` — the paper's MNIST junction in block form
   (1024 -> 512 @ density 0.25, the TPU-native analogue of the 1024x64
@@ -8,6 +8,11 @@ Two junction shapes anchor the perf trajectory from this PR onward:
 * ``engine.ffn.*``   — a transformer FFN up-projection
   (1024 -> 4096 @ density 0.25), the shape the ROADMAP north-star cares
   about.
+* ``engine.moe.*``   — a full sparse-expert MoE layer (4 experts, top-2,
+  1024 -> 512 per expert @ density 0.25) through ``moe_apply``: routing +
+  dispatch identical per engine, the expert FFNs either through the
+  expert-batched fused kernels (grid (E, M/bm, nob/bn), SwiGLU gate in
+  one pass) or the reference gather+einsum loop.
 
 Each row times one jit'd forward+backward (loss = sum(y)) per engine.
 Off-TPU the Pallas rows run in interpret mode — an emulator, so their
@@ -22,15 +27,20 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ArchConfig, MoEConfig
 from repro.core import sparse_linear as sl
 from repro.core.sparsity import SparsityConfig, make_block_pattern
 from repro.kernels import block_sparse_matmul as bsm
+from repro.models import moe as moe_mod
 
 SHAPES = {
     # name: (n_in, n_out, density, block, M_fast, M_full)
     "mnist": (1024, 512, 0.25, 128, 256, 12544),
     "ffn": (1024, 4096, 0.25, 128, 256, 4096),
 }
+
+# MoE bench: (E, top_k, d_model, d_expert, density, block, tok_fast, tok_full)
+MOE_SHAPE = (4, 2, 1024, 512, 0.25, 128, 128, 2048)
 
 
 def _junction_params(n_in, n_out, density, block):
@@ -56,6 +66,36 @@ def _time_fwd_bwd(params, x, engine, n=3):
     return (time.perf_counter() - t0) / n
 
 
+def _moe_cfg(engine: str) -> ArchConfig:
+    E, K, d, f, density, block, _, _ = MOE_SHAPE
+    return ArchConfig(
+        name="bench-moe", family="moe", n_layers=1, d_model=d, n_heads=8,
+        kv_heads=8, head_dim=d // 8, d_ff=4 * d, vocab=256, dtype="float32",
+        moe=MoEConfig(num_experts=E, top_k=K, d_expert=f, group_size=2048),
+        sparsity=SparsityConfig(density=density, block=block, where="ffn"),
+        engine=engine)
+
+
+def _time_moe_fwd_bwd(params, x, engine, n=1):
+    cfg = _moe_cfg(engine)
+
+    @jax.jit
+    def step(params, x):
+        def loss(p, x):
+            y, aux = moe_mod.moe_apply(p, x, cfg)
+            return jnp.sum(y) + aux
+        # allow_int: the shared block pattern rides in int32 param leaves
+        return jax.value_and_grad(loss, allow_int=True)(params, x)
+
+    out = step(params, x)           # compile
+    jax.block_until_ready(jax.tree.leaves(out))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = step(params, x)
+    jax.block_until_ready(jax.tree.leaves(out))
+    return (time.perf_counter() - t0) / n
+
+
 def bench(fast=True):
     on_tpu = jax.default_backend() == "tpu"
     rows = []
@@ -77,4 +117,26 @@ def bench(fast=True):
                 "derived": f"M={M} {n_in}->{n_out} d={density} bs={block} "
                            f"grid={grid[0]}x{grid[1]} mode={mode}",
             })
+
+    # MoE expert FFNs through the expert-batched engine (ISSUE 2 tentpole)
+    E, K, d, f, density, block, tok_fast, tok_full = MOE_SHAPE
+    T = tok_fast if fast else tok_full
+    cfg0 = _moe_cfg("jnp")
+    moe_params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, T, d), jnp.float32)
+    _, G, C = moe_mod.moe_dispatch_dims(cfg0.moe, T)
+    M_e = G * C                                    # capacity rows per expert
+    kb = moe_params["idx_in"].shape[1]
+    ebm, ebn = bsm.choose_expert_tiles(E, M_e, f // block, kb, block,
+                                       d // block, 4, 2)
+    n = 3 if on_tpu else 1
+    for engine in ("jnp", "pallas"):
+        dt = _time_moe_fwd_bwd(moe_params, x, engine, n=n)
+        mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+        rows.append({
+            "name": f"engine.moe.{engine}",
+            "us_per_call": dt * 1e6,
+            "derived": f"T={T} E={E} top{K} {d}->{f} d={density} bs={block} "
+                       f"C={C} tiles={ebm}x{ebn} mode={mode}",
+        })
     return rows

@@ -34,6 +34,14 @@ def main() -> None:
     benches["roofline"] = roofline_table.bench
     benches["engine"] = engine_benches.bench
     only = [s for s in args.only.split(",") if s]
+    unknown = sorted(set(only) - set(benches))
+    if unknown:
+        # a typo'd --only used to print the CSV header, run nothing, exit 0
+        # and (with --json) write an empty artifact — fail loudly instead
+        sys.stderr.write(
+            f"[bench] unknown bench name(s): {', '.join(unknown)}\n"
+            f"[bench] valid names: {', '.join(sorted(benches))}\n")
+        raise SystemExit(2)
     print("name,us_per_call,derived")
     failures = 0
     results: dict[str, float] = {}

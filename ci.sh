@@ -4,8 +4,9 @@
 #   ./ci.sh            # tests + engine/roofline benches, BENCH_ci.json
 #   BENCH_TAG=pr42 ./ci.sh
 #
-# Fails on test failures or bench harness errors (benchmarks/run.py exits
-# nonzero when any bench raises).
+# Fails on test failures, bench harness errors (benchmarks/run.py exits
+# nonzero when any bench raises or --only names an unknown bench), or an
+# empty bench artifact (guards the silent-no-op class of regressions).
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -15,7 +16,16 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 TAG="${BENCH_TAG:-ci}"
-echo "== fast benches (engine, roofline) =="
+echo "== fast benches (engine incl. MoE rows, roofline) =="
 python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json"
+
+python - "BENCH_${TAG}.json" <<'PY'
+import json, sys
+path = sys.argv[1]
+data = json.load(open(path))
+if not data:
+    sys.exit(f"[ci] empty bench artifact {path} — benches ran nothing")
+print(f"[ci] {path}: {len(data)} bench entries")
+PY
 
 echo "== ci.sh OK =="

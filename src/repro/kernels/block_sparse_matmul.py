@@ -28,6 +28,23 @@ and fuses FF/BP/UP into one pipeline.  Here the analogue is:
 Tile sizes come from ``choose_tiles`` — a small autotune table keyed on
 ``(M, nob, kb, bs)`` with a VMEM-budget heuristic fallback (see
 ROADMAP.md "Kernel engine" for the table format).
+
+**Expert-batched variants** (``expert_*``) extend every kernel with a
+leading expert grid dimension — grid ``(E, M/bm, nob/bn)`` over per-expert
+weights ``[E, nob, kb, bs, bs]``.  This is the paper's reuse claim made
+literal: one pre-defined junction shape (the block pattern, riding once in
+scalar prefetch) shared by all E replicated units, only the weights differ
+per expert.  ``expert_gated_fwd`` additionally fuses the GShard/SwiGLU
+gate — ``silu(x @ Wg) * (x @ Wi)`` — into a single pass: both fan-in
+reductions accumulate side by side in VMEM scratch and the gate epilogue
+is applied before the one output write, so the two pre-activations never
+round-trip HBM in the forward (they are emitted only as backward
+residuals).  ``expert_gated_dx``/``expert_gated_dw`` recompute both branch
+gradients (``dz_g = dh * u * silu'(g)``, ``dz_u = dh * silu(g)``) in their
+prologues from those residuals and run the two reverse/update reductions
+in the same kernel body.  Expert tile sizes come from
+``choose_expert_tiles`` / ``EXPERT_TUNE_TABLE`` keyed on
+``(E, M, nob, kb, bs)``.
 """
 from __future__ import annotations
 
@@ -103,6 +120,20 @@ TUNE_TABLE: dict[tuple[int, int, int, int], tuple[int, int]] = {
 }
 
 
+# Expert-batched autotune table:
+# (E, M, nob, kb, bs, n_weight_operands) -> (bm, bn).  Same contract as
+# TUNE_TABLE with two extra key dims: the expert count, and the number of
+# weight tensors the kernel streams per step (2 for the gated kernel, so
+# its entries are tuned for double the weight-bundle residency).  Entries
+# come from measured engine.moe.* rows in BENCH_*.json artifacts.
+EXPERT_TUNE_TABLE: dict[tuple[int, int, int, int, int, int],
+                        tuple[int, int]] = {
+    # engine.moe bench full shape, gated entry kernel: E=4 experts, top-2
+    # routed 2048 tokens (capacity rows M=1280), 1024->512 @ kb=2, bs=128
+    (4, 1280, 4, 2, 128, 2): (256, 4),
+}
+
+
 def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
 
@@ -117,6 +148,17 @@ def _choose_bm(M: int, row_blocks: int, bs: int, itemsize: int) -> int:
     return max(16, min(bm, _round_up(M, 16)))
 
 
+def _choose_bn(nob: int, kb: int, bs: int, itemsize: int,
+               budget: int) -> int:
+    """Largest power-of-two divisor of nob whose weight bundle fits the
+    per-step VMEM budget."""
+    bn = 1
+    while (bn < MAX_BN and nob % (2 * bn) == 0
+           and 2 * bn * kb * bs * bs * itemsize <= budget):
+        bn *= 2
+    return bn
+
+
 def choose_tiles(M: int, nob: int, kb: int, bs: int, nib: int,
                  itemsize: int = 4) -> tuple[int, int]:
     """(bm, bn) for the fused forward: autotune table first, then a VMEM
@@ -127,11 +169,25 @@ def choose_tiles(M: int, nob: int, kb: int, bs: int, nib: int,
         bm, bn = hit
         return max(16, min(bm, _round_up(M, 16))), bn
     bm = _choose_bm(M, nib, bs, itemsize)
-    bn = 1
-    while (bn < MAX_BN and nob % (2 * bn) == 0
-           and 2 * bn * kb * bs * bs * itemsize <= 2 * 1024 * 1024):
-        bn *= 2
-    return bm, bn
+    return bm, _choose_bn(nob, kb, bs, itemsize, 2 * 1024 * 1024)
+
+
+def choose_expert_tiles(E: int, M: int, nob: int, kb: int, bs: int, nib: int,
+                        itemsize: int = 4, n_weight_operands: int = 1
+                        ) -> tuple[int, int]:
+    """(bm, bn) for the expert-batched kernels: EXPERT_TUNE_TABLE first,
+    then the same VMEM heuristic as ``choose_tiles`` — one expert's row
+    block is resident per grid step, so bm is bounded exactly as in the
+    single-junction case; bn's weight-bundle budget is split across the
+    ``n_weight_operands`` streamed weight tensors (2 for the gated
+    kernel, which is also part of the table key)."""
+    hit = EXPERT_TUNE_TABLE.get((E, M, nob, kb, bs, n_weight_operands))
+    if hit is not None:
+        bm, bn = hit
+        return max(16, min(bm, _round_up(M, 16))), bn
+    bm = _choose_bm(M, nib, bs, itemsize)
+    budget = 2 * 1024 * 1024 // max(1, n_weight_operands)
+    return bm, _choose_bn(nob, kb, bs, itemsize, budget)
 
 
 def fwd_grid(M: int, nob: int, kb: int, bs: int, nib: int,
@@ -359,3 +415,408 @@ def dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
     if with_bias:
         return outs[0], outs[1].reshape(-1)
     return outs[0], None
+
+
+# ==================================================== expert-batched kernels
+def expert_fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
+               bn: int | None = None, save_pre: bool = False,
+               interpret: bool = False):
+    """x [E, M, nib*bs], w [E, nob, kb, bs, bs], shared idx [nob, kb],
+    bias [E, nob*bs] -> act(x_e @ W_e + b_e) [E, M, nob*bs] per expert.
+
+    Grid (E, M/bm, nob/bn): the expert dimension is the outermost grid
+    axis; the pattern rides once in scalar prefetch and is reused by every
+    expert — the paper's "one junction shape, replicated units" claim."""
+    E, M, _ = x.shape
+    _, nob, kb, bs, _ = w.shape
+    nib = x.shape[2] // bs
+    cbm, cbn = choose_expert_tiles(E, M, nob, kb, bs, nib, x.dtype.itemsize)
+    bm = cbm if bm is None else bm
+    bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
+
+    def kernel(idx_ref, x_ref, w_ref, b_ref, *rest):
+        acc_ref = rest[-1]
+        o_ref = rest[0]
+        ob0 = pl.program_id(2) * bn
+        for j in range(bn):
+            acc = jnp.zeros((bm, bs), jnp.float32)
+            for k in range(kb):
+                ib = idx_ref[ob0 + j, k]
+                xk = x_ref[0, :, pl.ds(ib * bs, bs)]
+                acc = acc + jnp.dot(xk, w_ref[0, j, k],
+                                    preferred_element_type=jnp.float32)
+            acc_ref[:, j * bs:(j + 1) * bs] = acc
+        s = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if save_pre:
+            rest[1][0] = s.astype(rest[1].dtype)
+        o_ref[0] = act_fwd(s, act).astype(o_ref.dtype)
+
+    out_shape = [jax.ShapeDtypeStruct((E, M, nob * bs), x.dtype)]
+    out_specs = [pl.BlockSpec((1, bm, bn * bs), lambda e, m, o, idx: (e, m, o))]
+    if save_pre:
+        out_shape.append(jax.ShapeDtypeStruct((E, M, nob * bs), x.dtype))
+        out_specs.append(pl.BlockSpec((1, bm, bn * bs),
+                                      lambda e, m, o, idx: (e, m, o)))
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(E, M // bm, nob // bn),
+            in_specs=[
+                pl.BlockSpec((1, bm, nib * bs), lambda e, m, o, idx: (e, m, 0)),
+                pl.BlockSpec((1, bn, kb, bs, bs),
+                             lambda e, m, o, idx: (e, o, 0, 0, 0)),
+                pl.BlockSpec((1, bn * bs), lambda e, m, o, idx: (e, o)),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((bm, bn * bs), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(idx, x, w, bias)
+    return (outs[0], outs[1]) if save_pre else (outs[0], None)
+
+
+def expert_gated_fwd(x, wg, wi, idx, *, bm: int | None = None,
+                     bn: int | None = None, save_res: bool = False,
+                     interpret: bool = False):
+    """Fused SiLU-gate expert FFN entry: silu(x_e @ Wg_e) * (x_e @ Wi_e)
+    in one pass — both kb fan-in reductions accumulate side by side in
+    VMEM scratch, the gate epilogue fuses before the single output write.
+    Returns (h, g_pre, u) — the pre-activation g and the linear branch u
+    are emitted only when save_res (backward residuals)."""
+    E, M, _ = x.shape
+    _, nob, kb, bs, _ = wg.shape
+    nib = x.shape[2] // bs
+    cbm, cbn = choose_expert_tiles(E, M, nob, kb, bs, nib, x.dtype.itemsize,
+                                   n_weight_operands=2)
+    bm = cbm if bm is None else bm
+    bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
+
+    def kernel(idx_ref, x_ref, wg_ref, wi_ref, *rest):
+        accg_ref, accu_ref = rest[-2], rest[-1]
+        h_ref = rest[0]
+        ob0 = pl.program_id(2) * bn
+        for j in range(bn):
+            ag = jnp.zeros((bm, bs), jnp.float32)
+            au = jnp.zeros((bm, bs), jnp.float32)
+            for k in range(kb):
+                ib = idx_ref[ob0 + j, k]
+                xk = x_ref[0, :, pl.ds(ib * bs, bs)]
+                ag = ag + jnp.dot(xk, wg_ref[0, j, k],
+                                  preferred_element_type=jnp.float32)
+                au = au + jnp.dot(xk, wi_ref[0, j, k],
+                                  preferred_element_type=jnp.float32)
+            accg_ref[:, j * bs:(j + 1) * bs] = ag
+            accu_ref[:, j * bs:(j + 1) * bs] = au
+        g = accg_ref[...]
+        u = accu_ref[...]
+        if save_res:
+            rest[1][0] = g.astype(rest[1].dtype)
+            rest[2][0] = u.astype(rest[2].dtype)
+        h_ref[0] = (act_fwd(g, "silu") * u).astype(h_ref.dtype)
+
+    out_shape = [jax.ShapeDtypeStruct((E, M, nob * bs), x.dtype)]
+    out_specs = [pl.BlockSpec((1, bm, bn * bs), lambda e, m, o, idx: (e, m, o))]
+    if save_res:
+        for _ in range(2):
+            out_shape.append(jax.ShapeDtypeStruct((E, M, nob * bs), x.dtype))
+            out_specs.append(pl.BlockSpec((1, bm, bn * bs),
+                                          lambda e, m, o, idx: (e, m, o)))
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(E, M // bm, nob // bn),
+            in_specs=[
+                pl.BlockSpec((1, bm, nib * bs), lambda e, m, o, idx: (e, m, 0)),
+                pl.BlockSpec((1, bn, kb, bs, bs),
+                             lambda e, m, o, idx: (e, o, 0, 0, 0)),
+                pl.BlockSpec((1, bn, kb, bs, bs),
+                             lambda e, m, o, idx: (e, o, 0, 0, 0)),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((bm, bn * bs), jnp.float32),
+                            pltpu.VMEM((bm, bn * bs), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(idx, x, wg, wi)
+    return (outs[0], outs[1], outs[2]) if save_res else (outs[0], None, None)
+
+
+def expert_dx(dy, wrT, rev_ob, rev_cnt, res, *, act: str = "none",
+              bm: int | None = None, interpret: bool = False):
+    """dy [E, M, nob*bs] -> dx [E, M, nib*bs] via the shared reverse
+    pattern; wrT [E, nib, fb, bs, bs] per-expert reverse-gathered
+    pre-transposed bundles.  Grid (E, M/bm, nib)."""
+    E, M, _ = dy.shape
+    _, nib, fb, bs, _ = wrT.shape
+    nob = dy.shape[2] // bs
+    has_res = act != "none"
+    row_blocks = nob * (2 if has_res else 1)
+    if bm is None:
+        bm = math.gcd(_choose_bm(M, row_blocks, bs, dy.dtype.itemsize), M)
+    assert M % bm == 0
+
+    def kernel(rev_ob_ref, rev_cnt_ref, *refs):
+        if has_res:
+            dy_ref, res_ref, wrt_ref, o_ref = refs
+        else:
+            dy_ref, wrt_ref, o_ref = refs
+        i = pl.program_id(2)
+        cnt = rev_cnt_ref[i]
+        acc = jnp.zeros((bm, bs), jnp.float32)
+        for f in range(fb):
+            ob = rev_ob_ref[i, f]
+            dyb = dy_ref[0, :, pl.ds(ob * bs, bs)]
+            if has_res:
+                g = act_bwd(
+                    res_ref[0, :, pl.ds(ob * bs, bs)].astype(jnp.float32), act)
+                dz = (dyb.astype(jnp.float32) * g).astype(dyb.dtype)
+            else:
+                dz = dyb
+            part = jnp.dot(dz, wrt_ref[0, 0, f],
+                           preferred_element_type=jnp.float32)
+            valid = (f < cnt).astype(jnp.float32)
+            acc = acc + part * valid
+        o_ref[0] = acc.astype(o_ref.dtype)
+
+    in_specs = [pl.BlockSpec((1, bm, nob * bs),
+                             lambda e, m, i, rob, rc: (e, m, 0))]
+    inputs = [dy]
+    if has_res:
+        in_specs.append(pl.BlockSpec((1, bm, nob * bs),
+                                     lambda e, m, i, rob, rc: (e, m, 0)))
+        inputs.append(res)
+    in_specs.append(pl.BlockSpec((1, 1, fb, bs, bs),
+                                 lambda e, m, i, rob, rc: (e, i, 0, 0, 0)))
+    inputs.append(wrT)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(E, M // bm, nib),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bm, bs),
+                                   lambda e, m, i, rob, rc: (e, m, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, M, nib * bs), dy.dtype),
+        interpret=interpret,
+    )(rev_ob, rev_cnt, *inputs)
+
+
+def expert_gated_dx(dh, wgrT, wirT, rev_ob, rev_cnt, g, u, *,
+                    bm: int | None = None, interpret: bool = False):
+    """Fused two-branch dx for the gated expert FFN: both branch grads
+    (dz_g = dh * u * silu'(g), dz_u = dh * silu(g)) are recomputed per dy
+    block from the saved residuals and reduced against their reverse
+    bundles in the same fb loop — one pass over dh/g/u per input block."""
+    E, M, _ = dh.shape
+    _, nib, fb, bs, _ = wgrT.shape
+    nob = dh.shape[2] // bs
+    if bm is None:
+        bm = math.gcd(_choose_bm(M, 3 * nob, bs, dh.dtype.itemsize), M)
+    assert M % bm == 0
+
+    def kernel(rev_ob_ref, rev_cnt_ref, dh_ref, g_ref, u_ref, wgrt_ref,
+               wirt_ref, o_ref):
+        i = pl.program_id(2)
+        cnt = rev_cnt_ref[i]
+        acc = jnp.zeros((bm, bs), jnp.float32)
+        for f in range(fb):
+            ob = rev_ob_ref[i, f]
+            cols = pl.ds(ob * bs, bs)
+            dhb = dh_ref[0, :, cols].astype(jnp.float32)
+            gb = g_ref[0, :, cols].astype(jnp.float32)
+            ub = u_ref[0, :, cols].astype(jnp.float32)
+            dzg = (dhb * ub * act_bwd(gb, "silu")).astype(dh_ref.dtype)
+            dzu = (dhb * act_fwd(gb, "silu")).astype(dh_ref.dtype)
+            part = (jnp.dot(dzg, wgrt_ref[0, 0, f],
+                            preferred_element_type=jnp.float32)
+                    + jnp.dot(dzu, wirt_ref[0, 0, f],
+                              preferred_element_type=jnp.float32))
+            valid = (f < cnt).astype(jnp.float32)
+            acc = acc + part * valid
+        o_ref[0] = acc.astype(o_ref.dtype)
+
+    row = pl.BlockSpec((1, bm, nob * bs), lambda e, m, i, rob, rc: (e, m, 0))
+    wspec = pl.BlockSpec((1, 1, fb, bs, bs),
+                         lambda e, m, i, rob, rc: (e, i, 0, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(E, M // bm, nib),
+            in_specs=[row, row, row, wspec, wspec],
+            out_specs=pl.BlockSpec((1, bm, bs),
+                                   lambda e, m, i, rob, rc: (e, m, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, M, nib * bs), dh.dtype),
+        interpret=interpret,
+    )(rev_ob, rev_cnt, dh, g, u, wgrT, wirT)
+
+
+def expert_dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
+              bm: int | None = None, interpret: bool = False):
+    """(dw [E, nob, kb, bs, bs] fp32, db [E, nob*bs] fp32 or None) — grid
+    (E, nob, M/bm) with the M reduction innermost into fp32 VMEM scratch,
+    flushed once per (expert, output block); per-expert db accumulates in
+    the same pass."""
+    E, M, _ = x.shape
+    nob, kb = idx.shape
+    bs = dy.shape[2] // nob
+    has_res = act != "none"
+    if bm is None:
+        bm = math.gcd(_choose_bm(M, kb + 3, bs, x.dtype.itemsize), M)
+    assert M % bm == 0
+    nm = M // bm
+
+    def kernel(idx_ref, *refs):
+        n_in = (2 if has_res else 1) + kb
+        dy_ref = refs[0]
+        res_ref = refs[1] if has_res else None
+        x_refs = refs[n_in - kb:n_in]
+        if with_bias:
+            dw_ref, db_ref, accw_ref, accb_ref = refs[n_in:]
+        else:
+            dw_ref, accw_ref = refs[n_in:]
+        m = pl.program_id(2)
+
+        @pl.when(m == 0)
+        def _zero():
+            accw_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+            if with_bias:
+                accb_ref[...] = jnp.zeros((1, bs), jnp.float32)
+
+        if has_res:
+            grad = act_bwd(res_ref[0].astype(jnp.float32), act)
+            dzf = dy_ref[0].astype(jnp.float32) * grad
+            dz = dzf.astype(dy_ref.dtype)
+        else:
+            dzf = None
+            dz = dy_ref[0]
+        for k in range(kb):
+            accw_ref[k] = accw_ref[k] + jnp.dot(
+                x_refs[k][0].T, dz, preferred_element_type=jnp.float32)
+        if with_bias:
+            s = dzf if dzf is not None else dy_ref[0].astype(jnp.float32)
+            accb_ref[...] = accb_ref[...] + jnp.sum(s, axis=0, keepdims=True)
+
+        @pl.when(m == nm - 1)
+        def _flush():
+            dw_ref[...] = accw_ref[...][None, None]
+            if with_bias:
+                db_ref[...] = accb_ref[...][None]
+
+    in_specs = [pl.BlockSpec((1, bm, bs), lambda e, o, m, idx: (e, m, o))]
+    inputs = [dy]
+    if has_res:
+        in_specs.append(pl.BlockSpec((1, bm, bs),
+                                     lambda e, o, m, idx: (e, m, o)))
+        inputs.append(res)
+    for k in range(kb):
+        in_specs.append(pl.BlockSpec(
+            (1, bm, bs), lambda e, o, m, idx, k=k: (e, m, idx[o, k])))
+        inputs.append(x)
+
+    out_specs = [pl.BlockSpec((1, 1, kb, bs, bs),
+                              lambda e, o, m, idx: (e, o, 0, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((E, nob, kb, bs, bs), jnp.float32)]
+    scratch = [pltpu.VMEM((kb, bs, bs), jnp.float32)]
+    if with_bias:
+        out_specs.append(pl.BlockSpec((1, 1, bs), lambda e, o, m, idx: (e, o, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((E, nob, bs), jnp.float32))
+        scratch.append(pltpu.VMEM((1, bs), jnp.float32))
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(E, nob, nm),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(idx, *inputs)
+    if with_bias:
+        return outs[0], outs[1].reshape(E, -1)
+    return outs[0], None
+
+
+def expert_gated_dw(x, dh, idx, g, u, *, bm: int | None = None,
+                    interpret: bool = False):
+    """(dwg, dwi) [E, nob, kb, bs, bs] fp32 for the fused gated FFN — the
+    two branch grads are recomputed in the prologue from the (g, u)
+    residuals and both M reductions accumulate innermost into separate
+    VMEM scratch buffers, flushed once per (expert, output block)."""
+    E, M, _ = x.shape
+    nob, kb = idx.shape
+    bs = dh.shape[2] // nob
+    if bm is None:
+        bm = math.gcd(_choose_bm(M, kb + 5, bs, x.dtype.itemsize), M)
+    assert M % bm == 0
+    nm = M // bm
+
+    def kernel(idx_ref, dh_ref, g_ref, u_ref, *refs):
+        x_refs = refs[:kb]
+        dwg_ref, dwi_ref, accg_ref, accu_ref = refs[kb:]
+        m = pl.program_id(2)
+
+        @pl.when(m == 0)
+        def _zero():
+            accg_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+            accu_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+
+        dhb = dh_ref[0].astype(jnp.float32)
+        gb = g_ref[0].astype(jnp.float32)
+        ub = u_ref[0].astype(jnp.float32)
+        dzg = (dhb * ub * act_bwd(gb, "silu")).astype(dh_ref.dtype)
+        dzu = (dhb * act_fwd(gb, "silu")).astype(dh_ref.dtype)
+        for k in range(kb):
+            xT = x_refs[k][0].T
+            accg_ref[k] = accg_ref[k] + jnp.dot(
+                xT, dzg, preferred_element_type=jnp.float32)
+            accu_ref[k] = accu_ref[k] + jnp.dot(
+                xT, dzu, preferred_element_type=jnp.float32)
+
+        @pl.when(m == nm - 1)
+        def _flush():
+            dwg_ref[...] = accg_ref[...][None, None]
+            dwi_ref[...] = accu_ref[...][None, None]
+
+    row = pl.BlockSpec((1, bm, bs), lambda e, o, m, idx: (e, m, o))
+    in_specs = [row, row, row]
+    inputs = [dh, g, u]
+    for k in range(kb):
+        in_specs.append(pl.BlockSpec(
+            (1, bm, bs), lambda e, o, m, idx, k=k: (e, m, idx[o, k])))
+        inputs.append(x)
+
+    wout = pl.BlockSpec((1, 1, kb, bs, bs), lambda e, o, m, idx: (e, o, 0, 0, 0))
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(E, nob, nm),
+            in_specs=in_specs,
+            out_specs=[wout, wout],
+            scratch_shapes=[pltpu.VMEM((kb, bs, bs), jnp.float32),
+                            pltpu.VMEM((kb, bs, bs), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((E, nob, kb, bs, bs), jnp.float32),
+                   jax.ShapeDtypeStruct((E, nob, kb, bs, bs), jnp.float32)],
+        interpret=interpret,
+    )(idx, *inputs)
+    return outs[0], outs[1]

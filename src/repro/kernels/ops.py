@@ -7,6 +7,12 @@ Pallas.  The activation gradient is recomputed inside the backward
 kernels' prologues from the saved residual (y, or the pre-activation for
 silu/gelu), so the elementwise grad tensor never round-trips HBM.
 
+``expert_block_sparse_matmul`` / ``expert_gated_matmul`` are the
+expert-batched counterparts for MoE expert FFNs (models/moe.py): one
+shared block pattern, per-expert weights [E, nob, kb, bs, bs], grid
+(E, M/bm, nob/bn), with the SwiGLU gate fused into a single forward pass
+and matching custom_vjps through the expert dx/dw kernels.
+
 Kernels execute in interpret mode off-TPU (the container is CPU-only);
 on TPU ``interpret=False`` (the default auto-detects the backend).
 
@@ -118,6 +124,133 @@ def block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,
                  has_bias=bias is not None)
     y = _bsm_core(spec, x2, w.astype(x.dtype), b, idx, rev_ob, rev_t, rev_cnt)
     return y[:M].reshape(*lead, -1)
+
+
+# ------------------------------------------------ expert-batched block sparse
+def _pad_expert_rows(x, bm):
+    M = x.shape[1]
+    pad = (-M) % bm
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x, M
+
+
+def _rev_weight_bundles(w, rev_ob, rev_t, dtype):
+    """Per-expert reverse-gathered, pre-transposed bundles
+    [E, nib, fb, bs, bs] (one XLA tile-gather per backward call)."""
+    return jnp.swapaxes(w[:, rev_ob, rev_t], -1, -2).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ebsm_core(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
+    y, _ = bsm.expert_fwd(x, w, idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
+                          save_pre=False, interpret=spec.interpret)
+    return y
+
+
+def _ebsm_fwd(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
+    needs_pre = spec.act in bsm.ACT_NEEDS_PRE
+    y, pre = bsm.expert_fwd(x, w, idx, b, act=spec.act, bm=spec.bm,
+                            bn=spec.bn, save_pre=needs_pre,
+                            interpret=spec.interpret)
+    res = pre if needs_pre else (y if spec.act != "none" else None)
+    return y, (x, w, res, idx, rev_ob, rev_t, rev_cnt)
+
+
+def _ebsm_bwd(spec, saved, dy):
+    x, w, res, idx, rev_ob, rev_t, rev_cnt = saved
+    wrT = _rev_weight_bundles(w, rev_ob, rev_t, dy.dtype)
+    dxv = bsm.expert_dx(dy, wrT, rev_ob, rev_cnt, res, act=spec.act,
+                        interpret=spec.interpret)
+    dwv, dbv = bsm.expert_dw(x, dy, idx, res, act=spec.act,
+                             with_bias=spec.has_bias,
+                             interpret=spec.interpret)
+    if dbv is None:  # bias-free experts: the zero-bias operand gets zeros
+        dbv = jnp.zeros((dy.shape[0], dy.shape[2]), jnp.float32)
+    return dxv, dwv.astype(w.dtype), dbv, None, None, None, None
+
+
+_ebsm_core.defvjp(_ebsm_fwd, _ebsm_bwd)
+
+
+def expert_block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,
+                               act: str = "none",
+                               interpret: bool | None = None,
+                               bm: int | None = None, bn: int | None = None):
+    """x [E, M, n_in] -> act(x_e @ W_e + b_e) [E, M, n_out]: per-expert
+    weights w [E, nob, kb, bs, bs] through ONE shared block pattern, grid
+    (E, M/bm, nob/bn), custom_vjp through the expert dx/dw kernels."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    E, M0, _ = x.shape
+    _, nob, kb, bs, _ = w.shape
+    nib = x.shape[-1] // bs
+    if bm is None or bn is None:
+        cbm, cbn = bsm.choose_expert_tiles(E, M0, nob, kb, bs, nib,
+                                           x.dtype.itemsize)
+        bm = cbm if bm is None else bm
+        bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    x2, M = _pad_expert_rows(x, bm)
+    b = (jnp.zeros((E, nob * bs), x.dtype) if bias is None
+         else bias.astype(x.dtype))
+    spec = _Spec(act=act, bm=bm, bn=bn, interpret=interpret,
+                 has_bias=bias is not None)
+    y = _ebsm_core(spec, x2, w.astype(x.dtype), b, idx, rev_ob, rev_t, rev_cnt)
+    return y[:, :M]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _egated_core(spec, x, wg, wi, idx, rev_ob, rev_t, rev_cnt):
+    h, _, _ = bsm.expert_gated_fwd(x, wg, wi, idx, bm=spec.bm, bn=spec.bn,
+                                   save_res=False, interpret=spec.interpret)
+    return h
+
+
+def _egated_fwd(spec, x, wg, wi, idx, rev_ob, rev_t, rev_cnt):
+    h, g, u = bsm.expert_gated_fwd(x, wg, wi, idx, bm=spec.bm, bn=spec.bn,
+                                   save_res=True, interpret=spec.interpret)
+    return h, (x, wg, wi, g, u, idx, rev_ob, rev_t, rev_cnt)
+
+
+def _egated_bwd(spec, saved, dh):
+    x, wg, wi, g, u, idx, rev_ob, rev_t, rev_cnt = saved
+    wgrT = _rev_weight_bundles(wg, rev_ob, rev_t, dh.dtype)
+    wirT = _rev_weight_bundles(wi, rev_ob, rev_t, dh.dtype)
+    dxv = bsm.expert_gated_dx(dh, wgrT, wirT, rev_ob, rev_cnt, g, u,
+                              interpret=spec.interpret)
+    dwg, dwi = bsm.expert_gated_dw(x, dh, idx, g, u, interpret=spec.interpret)
+    return dxv, dwg.astype(wg.dtype), dwi.astype(wi.dtype), None, None, None, None
+
+
+_egated_core.defvjp(_egated_fwd, _egated_bwd)
+
+
+def expert_gated_matmul(x, wg, wi, idx, rev_ob, rev_t, rev_cnt,
+                        interpret: bool | None = None,
+                        bm: int | None = None, bn: int | None = None):
+    """x [E, M, n_in] -> silu(x_e @ Wg_e) * (x_e @ Wi_e) [E, M, n_out] in
+    ONE fused kernel pass (GShard/SwiGLU expert FFN entry); the backward
+    runs through the fused two-branch expert_gated_dx/dw kernels with both
+    branch grads recomputed from the saved (g, u) residuals."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    E, M0, _ = x.shape
+    _, nob, kb, bs, _ = wg.shape
+    nib = x.shape[-1] // bs
+    if bm is None or bn is None:
+        cbm, cbn = bsm.choose_expert_tiles(E, M0, nob, kb, bs, nib,
+                                           x.dtype.itemsize,
+                                           n_weight_operands=2)
+        bm = cbm if bm is None else bm
+        bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    x2, M = _pad_expert_rows(x, bm)
+    spec = _Spec(act="silu", bm=bm, bn=bn, interpret=interpret,
+                 has_bias=False)
+    h = _egated_core(spec, x2, wg.astype(x.dtype), wi.astype(x.dtype), idx,
+                     rev_ob, rev_t, rev_cnt)
+    return h[:, :M]
 
 
 # ------------------------------------------------------------ fixed point

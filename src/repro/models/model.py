@@ -445,6 +445,35 @@ def make_cache(cfg: ArchConfig, batch: int, seq: int):
     raise ValueError(fam)
 
 
+def cache_seq_axes(cfg: ArchConfig):
+    """Per-leaf placement metadata mirroring ``make_cache``'s structure:
+    the axis holding the sequence dimension for leaves that grow with
+    decode capacity, or ``-1`` for same-shape state leaves (conv/ssm
+    state, cross-attn KV) that are copied wholesale.  Consumed by
+    serve/engine.Engine._grow_cache when re-homing a prefill cache — an
+    explicit contract instead of guessing the seq dim from shapes."""
+    SEQ, STATE = 2, -1
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"k": SEQ, "v": SEQ}
+    if fam == "moe":
+        if cfg.attn_kind == "mla":
+            mk = lambda: {"latent": SEQ, "k_rope": SEQ}
+        else:
+            mk = lambda: {"k": SEQ, "v": SEQ}
+        if cfg.moe.first_dense_layers:
+            return {"dense": mk(), "moe": mk()}
+        return mk()
+    if fam == "ssm":
+        return {"conv": STATE, "ssm": STATE}
+    if fam == "hybrid":
+        return {"attn": {"k": SEQ, "v": SEQ},
+                "ssm": {"conv": STATE, "ssm": STATE}}
+    if fam == "audio":
+        return {"k": SEQ, "v": SEQ, "ck": STATE, "cv": STATE}
+    raise ValueError(fam)
+
+
 # ============================================================= loss
 def softmax_xent(logits, labels):
     """Vocab-sharding-friendly CE: label logit extracted by fused mask-sum

@@ -6,6 +6,16 @@ are [G, g, E, C] einsums, so with experts sharded over the "model" axis
 expert matmuls are dense MXU work.  Dropped tokens (over capacity) fall
 through on the residual path — standard GShard semantics.
 
+When the paper's pre-defined sparsity applies to the expert FFNs, one
+block pattern (same junction shape) is shared by all experts with
+per-expert weights — and the expert matmuls run through the fused
+edge-bundle Pallas engine's expert-batched kernels
+(kernels/ops.expert_gated_matmul + expert_block_sparse_matmul, grid
+(E, M/bm, nob/bn), SwiGLU gate fused into one pass) when
+``ArchConfig.engine`` resolves to "pallas".  The vmapped gather+einsum
+loop (``_expert_apply``) remains the reference path and the path the
+dry-run FLOP accounting sees (launch/dryrun.py pins engine="jnp").
+
 Aux load-balance loss follows Switch/GShard: E * sum_e f_e * p_e.
 """
 from __future__ import annotations
@@ -21,6 +31,17 @@ from repro.core import sparse_linear as sl
 from repro.models.layers import mlp_apply, mlp_init
 
 Params = dict[str, Any]
+
+
+def moe_dispatch_dims(mo, T: int) -> tuple[int, int, int]:
+    """(g, G, C) for T tokens: dispatch group size, group count, and the
+    per-expert capacity (rounded up to a multiple of 4).  Single source of
+    the capacity formula — benchmarks derive their metadata from it."""
+    g = min(mo.group_size, T)
+    G = T // g
+    C = int(np.ceil(g * mo.top_k * mo.capacity_factor / mo.num_experts))
+    C = max(4, -(-C // 4) * 4)
+    return g, G, C
 
 
 def _expert_sparse_ok(cfg: ArchConfig) -> bool:
@@ -54,6 +75,14 @@ def moe_init(key, cfg: ArchConfig, dtype=jnp.float32, seed: int = 0) -> Params:
             "wo": jax.random.normal(ks[3], shp_out, dtype) * s_out,
             "idx_in": jnp.asarray(pat_in.idx),
             "idx_out": jnp.asarray(pat_out.idx),
+            # reverse patterns for the Pallas engine's expert dx kernels
+            # (static, non-trainable, shared by all experts like idx_*)
+            "rev_in_ob": jnp.asarray(pat_in.rev_ob),
+            "rev_in_t": jnp.asarray(pat_in.rev_t),
+            "rev_in_cnt": jnp.asarray(pat_in.rev_cnt),
+            "rev_out_ob": jnp.asarray(pat_out.rev_ob),
+            "rev_out_t": jnp.asarray(pat_out.rev_t),
+            "rev_out_cnt": jnp.asarray(pat_out.rev_cnt),
         })
     else:
         p.update({
@@ -68,8 +97,10 @@ def moe_init(key, cfg: ArchConfig, dtype=jnp.float32, seed: int = 0) -> Params:
 
 
 def _expert_apply(w, idx, x):
-    """Batched block-sparse expert matmul: x [G,E,C,din] -> [G,E,C,dout].
-    Accumulates over fan-in slots to avoid the kb-times gather blow-up."""
+    """Batched block-sparse expert matmul (jnp reference path):
+    x [G,E,C,din] -> [G,E,C,dout].  Accumulates over fan-in slots to avoid
+    the kb-times gather blow-up.  This is also the path the dry-run FLOP
+    accounting sees (density-scaled einsums)."""
     E, nob, kb, bs, _ = w.shape
     G, _, C, din = x.shape
     xb = x.reshape(G, E, C, din // bs, bs)
@@ -77,22 +108,40 @@ def _expert_apply(w, idx, x):
     y = None
     for k in range(kb):
         xk = jnp.take(xb, idx[:, k], axis=3)          # [G,E,C,nob,bs]
-        part = jnp.einsum("GECob,Eobc->GECoc", xk, wc[:, k])
+        # slot k of every output block: wc[:, :, k] [E, nob, bs, bs] — the
+        # seed sliced axis 1 (the *output-block* axis), which only shaped
+        # up when nob == kb and silently transposed the weight layout
+        part = jnp.einsum("GECob,Eobc->GECoc", xk, wc[:, :, k])
         y = part if y is None else y + part
     return y.reshape(G, E, C, nob * bs)
 
 
+def _expert_ffn_pallas(p: Params, xd, E: int):
+    """Expert FFN stack through the expert-batched Pallas kernels:
+    xd [G,E,C,d] -> [G,E,C,d].  The gate (silu(x@wg) * (x@wi)) runs as ONE
+    fused kernel pass; wo through the plain expert-batched matmul."""
+    from repro.kernels import ops  # local import: kernels optional at runtime
+    G, _, C, D = xd.shape
+    xe = jnp.moveaxis(xd, 1, 0).reshape(E, G * C, D)
+    h = ops.expert_gated_matmul(
+        xe, p["wg"], p["wi"], p["idx_in"],
+        p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"])
+    ye = ops.expert_block_sparse_matmul(
+        h, p["wo"], p["idx_out"],
+        p["rev_out_ob"], p["rev_out_t"], p["rev_out_cnt"])
+    return jnp.moveaxis(ye.reshape(E, G, C, -1), 0, 1)
+
+
 def moe_apply(p: Params, x, cfg: ArchConfig):
-    """x [B,S,D] -> (y, aux_loss)."""
+    """x [B,S,D] -> (y, aux_loss).  The expert matmuls run through the
+    engine ``ArchConfig.engine`` resolves to: "pallas" selects the
+    expert-batched fused kernels, "jnp" the reference gather+einsum loop."""
     mo = cfg.moe
     B, S, D = x.shape
     E, K = mo.num_experts, mo.top_k
     T = B * S
-    g = min(mo.group_size, T)
+    g, G, C = moe_dispatch_dims(mo, T)
     assert T % g == 0, f"tokens {T} not divisible by moe group {g}"
-    G = T // g
-    C = int(np.ceil(g * K * mo.capacity_factor / E))
-    C = max(4, -(-C // 4) * 4)  # round up to a multiple of 4
 
     xt = x.reshape(G, g, D)
     logits = jnp.einsum("Ggd,de->Gge", xt, p["router"].astype(x.dtype))
@@ -119,9 +168,12 @@ def moe_apply(p: Params, x, cfg: ArchConfig):
 
     xd = jnp.einsum("GgEC,Ggd->GECd", dispatch.astype(x.dtype), xt)
     if "idx_in" in p:   # pre-defined-sparse experts (the paper's technique)
-        h = (jax.nn.silu(_expert_apply(p["wg"], p["idx_in"], xd))
-             * _expert_apply(p["wi"], p["idx_in"], xd))
-        ye = _expert_apply(p["wo"], p["idx_out"], h)
+        if sl.resolve_engine(cfg.engine) == "pallas":
+            ye = _expert_ffn_pallas(p, xd, E)
+        else:
+            h = (jax.nn.silu(_expert_apply(p["wg"], p["idx_in"], xd))
+                 * _expert_apply(p["wi"], p["idx_in"], xd))
+            ye = _expert_apply(p["wo"], p["idx_out"], h)
     else:
         h = (jax.nn.silu(jnp.einsum("GECd,Edf->GECf", xd, p["wg"].astype(x.dtype)))
              * jnp.einsum("GECd,Edf->GECf", xd, p["wi"].astype(x.dtype)))

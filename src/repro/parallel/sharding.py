@@ -119,7 +119,10 @@ def _leaf_spec(path: list[str], lshape: tuple, mesh: Mesh,
     # moe
     if leaf == "router":
         return (_fit(lshape[0], "data", mesh), _fit(lshape[1], "model", mesh))
-    if leaf in ("idx_in", "idx_out"):
+    if leaf in ("idx_in", "idx_out", "rev_in_ob", "rev_in_t", "rev_in_cnt",
+                "rev_out_ob", "rev_out_t", "rev_out_cnt"):
+        # shared expert block pattern + its reverse: replicated like every
+        # other pattern leaf (scalar-prefetch operands of the expert kernels)
         return (None,) * nd
     if parent == "moe" or (nd in (3, 5) and leaf in ("wi", "wg", "wo")):
         if nd == 5:               # sparse experts [E, nob, kb, bs, bs]: EP only

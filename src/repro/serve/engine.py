@@ -60,8 +60,11 @@ class Engine:
         logits, cache = self._prefill(self.params, batch)
         # re-home the prefill cache into a decode-capacity cache
         cache = self._grow_cache(cache, B, total, S)
-        key = jax.random.PRNGKey(self.scfg.seed)
-        tok = self._sample(logits[:, -1], key)[:, None]
+        # split before the first sample: the root key is only ever split,
+        # never consumed (sampling the first token with `key` and then
+        # splitting the same `key` reused it — correlated samples)
+        key, sub = jax.random.split(jax.random.PRNGKey(self.scfg.seed))
+        tok = self._sample(logits[:, -1], sub)[:, None]
         out = [tok]
         done = jnp.zeros((B,), bool)
         for i in range(self.scfg.max_new_tokens - 1):
@@ -77,16 +80,24 @@ class Engine:
         return np.asarray(jnp.concatenate(out, axis=1))
 
     def _grow_cache(self, cache, B, total, S):
-        """Copy the prefill cache (seq length S) into a total-capacity one."""
+        """Copy the prefill cache (seq length S) into a total-capacity one.
+
+        Placement is driven by ``M.cache_seq_axes`` metadata: leaves with a
+        seq axis are written at position 0 of that axis, same-shape state
+        leaves (conv/ssm state, cross-attn KV) are copied wholesale.  (The
+        previous shape-coincidence heuristic guessed axis 2 whenever
+        ndim >= 3 and the leading dims matched.)"""
         full = M.make_cache(self.cfg, B, total)
+        axes = M.cache_seq_axes(self.cfg)
 
-        def place(dst, src):
-            if dst.shape == src.shape:
-                return src.astype(dst.dtype)
-            if dst.ndim >= 3 and src.ndim == dst.ndim and src.shape[2] <= dst.shape[2] \
-                    and dst.shape[:2] == src.shape[:2]:
-                return jax.lax.dynamic_update_slice_in_dim(
-                    dst, src.astype(dst.dtype), 0, 2)
-            return src.astype(dst.dtype)  # state caches (conv/ssm): same shape
+        def place(ax, dst, src):
+            src = src.astype(dst.dtype)
+            if ax < 0:  # same-shape state leaf
+                assert dst.shape == src.shape, (dst.shape, src.shape)
+                return src
+            if src.shape[ax] > dst.shape[ax]:  # sliding window: keep tail
+                src = jax.lax.slice_in_dim(
+                    src, src.shape[ax] - dst.shape[ax], src.shape[ax], axis=ax)
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, 0, ax)
 
-        return jax.tree.map(place, full, cache)
+        return jax.tree.map(place, axes, full, cache)
