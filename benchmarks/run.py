@@ -5,16 +5,71 @@
                                             [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract); with
-``--json PATH`` also writes a ``BENCH_<tag>.json`` artifact mapping
-``name -> us_per_call`` so the perf trajectory is machine-trackable
-across PRs (diff two artifacts to see the movement).
+``--json PATH`` also writes a ``BENCH_<tag>.json`` artifact so the perf
+trajectory is machine-trackable across PRs (diff two artifacts to see
+the movement).  The artifact schema is
+
+    {"meta": {git_sha, backend, jax_version, tag, timestamp},
+     "results": {name: us_per_call}}
+
+— the meta stamp makes artifacts from different PRs comparable (same
+backend? which commit?).  Readers should use :func:`load_artifact`,
+which also accepts the pre-stamp flat ``{name: us_per_call}`` schema.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
+
+
+def _git_sha() -> str:
+    """Short HEAD sha, with a -dirty marker when the tree has uncommitted
+    changes — numbers measured on a dirty tree must not be attributed to
+    the clean commit."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+        return f"{sha}-dirty" if dirty else sha
+    except Exception:
+        return "unknown"
+
+
+def artifact_meta(tag: str) -> dict:
+    import jax
+    return {
+        "git_sha": _git_sha(),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "tag": tag,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+def load_artifact(path: str) -> tuple[dict, dict[str, float]]:
+    """(meta, results) from a BENCH_*.json of either schema: the stamped
+    {"meta": ..., "results": ...} form or the legacy flat name->us map."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "results" in data:
+        return data.get("meta", {}), data["results"]
+    return {}, data
+
+
+def _tag_from_path(path: str) -> str:
+    import os
+    base = os.path.basename(path)
+    if base.startswith("BENCH_") and base.endswith(".json"):
+        return base[len("BENCH_"):-len(".json")]
+    return base
 
 
 def main() -> None:
@@ -62,11 +117,14 @@ def main() -> None:
         sys.stderr.write(f"[bench] {name}: {len(rows)} rows "
                          f"in {time.perf_counter() - t0:.1f}s\n")
     if args.json:
+        meta = artifact_meta(_tag_from_path(args.json))
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
+            json.dump({"meta": meta, "results": results}, f,
+                      indent=2, sort_keys=True)
             f.write("\n")
         sys.stderr.write(f"[bench] wrote {len(results)} entries "
-                         f"to {args.json}\n")
+                         f"to {args.json} (sha {meta['git_sha']}, "
+                         f"{meta['backend']})\n")
     if failures:
         raise SystemExit(1)
 

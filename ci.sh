@@ -7,6 +7,10 @@
 # Fails on test failures, bench harness errors (benchmarks/run.py exits
 # nonzero when any bench raises or --only names an unknown bench), or an
 # empty bench artifact (guards the silent-no-op class of regressions).
+# Additionally compares the fresh artifact against the committed
+# benchmarks/BENCH_baseline.json and WARNS (non-fatal — interpret-mode
+# timings are noisy off-TPU) when any engine.* row slowed >20%, so the
+# perf trajectory is visible in CI output.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -19,13 +23,38 @@ TAG="${BENCH_TAG:-ci}"
 echo "== fast benches (engine incl. MoE rows, roofline) =="
 python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json"
 
-python - "BENCH_${TAG}.json" <<'PY'
-import json, sys
-path = sys.argv[1]
-data = json.load(open(path))
-if not data:
+python - "BENCH_${TAG}.json" benchmarks/BENCH_baseline.json <<'PY'
+import sys
+from benchmarks.run import load_artifact
+
+path, base_path = sys.argv[1], sys.argv[2]
+meta, results = load_artifact(path)
+if not results:
     sys.exit(f"[ci] empty bench artifact {path} — benches ran nothing")
-print(f"[ci] {path}: {len(data)} bench entries")
+print(f"[ci] {path}: {len(results)} bench entries "
+      f"(sha {meta.get('git_sha', 'unstamped')}, "
+      f"backend {meta.get('backend', '?')})")
+
+try:
+    _, base = load_artifact(base_path)
+except (OSError, ValueError) as e:  # missing OR unreadable: stay non-fatal
+    print(f"[ci] no usable baseline at {base_path} ({e.__class__.__name__}) "
+          f"— skipping perf comparison")
+    sys.exit(0)
+slow = []
+for name in sorted(base):
+    if not name.startswith("engine.") or name not in results:
+        continue
+    new, old = results[name], base[name]
+    ratio = new / old if old else float("inf")
+    flag = "  <-- WARN >20% slower" if ratio > 1.2 else ""
+    print(f"[ci]   {name}: {old:.0f} -> {new:.0f} us ({ratio:.2f}x){flag}")
+    if ratio > 1.2:
+        slow.append(name)
+if slow:
+    print(f"[ci] WARNING: {len(slow)} engine.* row(s) >20% slower than "
+          f"baseline ({', '.join(slow)}) — non-fatal, investigate before "
+          f"refreshing benchmarks/BENCH_baseline.json")
 PY
 
 echo "== ci.sh OK =="

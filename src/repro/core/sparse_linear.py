@@ -7,10 +7,12 @@ interleaver.  Three apply paths:
 
 * ``engine="jnp"``    — gather + einsum, pure jnp.  Used for lowering/dry-run
                         (correct FLOP accounting) and CPU tests.
-* ``engine="pallas"`` — the fused edge-bundle Pallas engine
-                        (kernels/block_sparse_matmul.py): kb reduction +
-                        bias + activation in one kernel, custom_vjp through
-                        the fused dx/dw kernels.  TPU target; interpret
+* ``engine="pallas"`` — the unified edge-bundle Pallas engine
+                        (kernels/ops.junction_matmul, the E=1 case of the
+                        E-generic kernel family): kb reduction + bias +
+                        activation in one kernel, custom_vjp through the
+                        fused dx/dw kernels with the reverse weight
+                        bundles DMA'd in-kernel.  TPU target; interpret
                         mode off-TPU (tests).
 * ``engine="auto"``   — pallas on TPU backends, jnp elsewhere.  This is
                         the default the whole stack runs through
@@ -34,6 +36,15 @@ import numpy as np
 from repro.core.sparsity import BlockPattern, SparsityConfig, make_block_pattern
 
 Params = dict[str, Any]
+
+# Static pattern leaves of a sparse junction: int32 scalar-prefetch operands
+# of the unified kernels — non-trainable, replicated by parallel/sharding.py
+# and skipped by the optimizer.  MoE expert FFNs store the same leaves under
+# per-junction names (one shared pattern for the in/out junctions).
+PATTERN_LEAVES = ("idx", "rev_ob", "rev_t", "rev_cnt")
+MOE_PATTERN_LEAVES = ("idx_in", "idx_out",
+                      "rev_in_ob", "rev_in_t", "rev_in_cnt",
+                      "rev_out_ob", "rev_out_t", "rev_out_cnt")
 
 
 def is_sparse(params: Params) -> bool:
@@ -139,7 +150,7 @@ def apply(params: Params, x: jax.Array, *, engine: str = "auto",
         return _with_act(apply_dense(params, x), act)
     if resolve_engine(engine) == "pallas":
         from repro.kernels import ops  # local import: kernels optional at runtime
-        return ops.block_sparse_matmul(
+        return ops.junction_matmul(
             x, params["w"], params["idx"], params["rev_ob"], params["rev_t"],
             params["rev_cnt"], bias=params.get("b"), act=act)
     return _with_act(apply_jnp(params, x), act)

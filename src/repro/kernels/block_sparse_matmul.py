@@ -1,50 +1,74 @@
-"""Pallas TPU kernels for pre-defined block-sparse matmul — the paper's
-edge processing on the MXU, as a *fused edge-bundle engine*.
+"""Pallas TPU kernels for pre-defined block-sparse matmul — ONE E-generic
+edge-bundle engine, the paper's reconfigurable junction datapath.
 
-The FPGA processes z clash-free edges/cycle against banked weight memories
-and fuses FF/BP/UP into one pipeline.  Here the analogue is:
+The FPGA's core claim is that a single edge-processing datapath serves
+every junction — reconfigured, not re-implemented, per layer.  Here that
+is literal: there is exactly one kernel family, generic over a leading
+expert dimension ``E``.  A single dense-model junction is the ``E=1``
+case (``kernels/ops.junction_matmul`` squeezes it in and out); MoE expert
+FFNs are ``E>1`` with per-expert weights ``[E, nob, kb, bs, bs]`` sharing
+ONE block pattern that rides once in scalar prefetch — the paper's
+"one junction shape, replicated units" reuse claim.
 
-* **forward** — grid ``(M/bm, nob/bn)``: one step computes ``bn`` output
-  tiles.  The whole ``kb`` fan-in reduction runs *inside* the kernel body
-  against an fp32 VMEM scratch accumulator (no read-modify-write through
-  the output ref, no revisiting), and the bias + activation epilogue (the
-  paper's FF-stage sigmoid fused into the edge pipeline) is applied before
-  the single output write.  The activation row block ``[bm, nib*bs]``
-  stays resident in VMEM across the ``nob/bn`` bundle steps — the banked
+* **fwd** — grid ``(E, M/bm, nob/bn)``: one step computes ``bn`` output
+  tiles for one expert.  The whole ``kb`` fan-in reduction runs *inside*
+  the kernel body against an fp32 VMEM scratch accumulator (no output
+  revisiting), and the bias + activation epilogue (the paper's FF-stage
+  sigmoid fused into the edge pipeline) is applied before the single
+  output write.  The activation row block ``[bm, nib*bs]`` stays
+  VMEM-resident across the ``nob/bn`` bundle steps — the banked
   activation memory — while weight bundles stream through; the block
   index array rides in as a scalar-prefetch operand and drives in-kernel
   dynamic slices (the interleaver in SMEM).
-* **dx** — grid ``(M/bm, nib)``: the reverse (fan-out) pattern reduction
-  over ``fb`` runs in-body with the ragged valid-count mask applied per
-  slot.  The activation gradient is recomputed in the prologue from the
-  saved residual (output y, or pre-activation s for silu/gelu), so the
-  elementwise grad tensor ``dz`` never materializes in HBM.
-* **dw** — grid ``(nob, M/bm)`` with the M reduction innermost into fp32
-  VMEM scratch, written once on the last step.  The ``kb`` gathered input
-  blocks arrive through scalar-prefetch-driven BlockSpec index_maps (the
-  interleaver as DMA descriptor), and the bias gradient accumulates in
-  the same pass.
+* **dx** — grid ``(E, M/bm, nib)``: the reverse (fan-out) pattern
+  reduction over ``fb`` runs in-body.  The reverse weight bundles are
+  **DMA'd in-kernel**: the forward-layout weights stay in HBM
+  (``memory_space=ANY``) and each ``w[e, rev_ob[i,f], rev_t[i,f]]`` tile
+  is copied HBM→VMEM through a double-buffered ``make_async_copy`` whose
+  offsets come from the scalar-prefetched reverse pattern — no XLA
+  ``w[rev_ob, rev_t]`` pre-gather, no w-sized HBM round-trip per
+  backward step.  The bundle is consumed un-transposed (the dot
+  contracts both operands on their last dim).  Padded reverse slots
+  (``f >= rev_cnt[i]``, including whole input blocks with zero fan-out)
+  carry in-bounds ``(0, 0)`` sentinels and their contribution is
+  ``where``-masked — exact zeros even against non-finite upstream
+  gradients.  The activation gradient is recomputed in the prologue from
+  the saved residual (output y, or pre-activation s for silu/gelu), so
+  the elementwise grad tensor ``dz`` never materializes in HBM.
+* **dw** — grid ``(E, nob, M/bm)`` with the M reduction innermost into
+  fp32 VMEM scratch, written once on the last step.  The ``kb`` gathered
+  input blocks arrive through scalar-prefetch-driven BlockSpec
+  index_maps (the interleaver as DMA descriptor), and the bias gradient
+  accumulates in the same pass.
+* **gated_{fwd,dx,dw}** — the GShard/SwiGLU gate
+  ``silu(x @ Wg) * (x @ Wi)`` fused into single passes: both fan-in
+  reductions accumulate side by side in VMEM scratch in the forward, and
+  the backward kernels recompute both branch gradients
+  (``dz_g = dh * u * silu'(g)``, ``dz_u = dh * silu(g)``) from the saved
+  ``(g, u)`` residuals, ``gated_dx`` double-buffering BOTH reverse
+  weight streams.
 
-Tile sizes come from ``choose_tiles`` — a small autotune table keyed on
-``(M, nob, kb, bs)`` with a VMEM-budget heuristic fallback (see
-ROADMAP.md "Kernel engine" for the table format).
+Tile tuning — one table for every configuration
+-----------------------------------------------
 
-**Expert-batched variants** (``expert_*``) extend every kernel with a
-leading expert grid dimension — grid ``(E, M/bm, nob/bn)`` over per-expert
-weights ``[E, nob, kb, bs, bs]``.  This is the paper's reuse claim made
-literal: one pre-defined junction shape (the block pattern, riding once in
-scalar prefetch) shared by all E replicated units, only the weights differ
-per expert.  ``expert_gated_fwd`` additionally fuses the GShard/SwiGLU
-gate — ``silu(x @ Wg) * (x @ Wi)`` — into a single pass: both fan-in
-reductions accumulate side by side in VMEM scratch and the gate epilogue
-is applied before the one output write, so the two pre-activations never
-round-trip HBM in the forward (they are emitted only as backward
-residuals).  ``expert_gated_dx``/``expert_gated_dw`` recompute both branch
-gradients (``dz_g = dh * u * silu'(g)``, ``dz_u = dh * silu(g)``) in their
-prologues from those residuals and run the two reverse/update reductions
-in the same kernel body.  Expert tile sizes come from
-``choose_expert_tiles`` / ``EXPERT_TUNE_TABLE`` keyed on
-``(E, M, nob, kb, bs)``.
+``TUNE_TABLE`` maps a canonical 6-key
+
+    (E, M, nob, kb, bs, n_weight_operands) -> (bm, bn)
+
+where ``E`` is the expert count (1 for single junctions), ``M`` the
+*unpadded* row count the public wrapper sees, ``nob``/``kb``/``bs`` the
+output-block/fan-in/block-size shape, and ``n_weight_operands`` the
+number of weight tensors streamed per step (2 for the gated kernel —
+its entries are tuned for double the weight-bundle residency).
+
+To add a measured entry: run ``benchmarks/run.py --json`` on real
+hardware, pick the winning tiles for an ``engine.*`` row, and add the
+key to ``_SEED_ENTRIES`` below.  Legacy key schemas keep working —
+``canonical_tune_key`` migrates PR 1's 4-key ``(M, nob, kb, bs)`` and
+the transitional 5-key ``(E, M, nob, kb, bs)`` by pinning the missing
+dims to ``E=1`` / ``n_weight_operands=1`` — so entries derived from old
+``BENCH_*.json`` artifacts can be pasted in their original form.
+Misses fall back to a VMEM-budget heuristic (``choose_tiles``).
 """
 from __future__ import annotations
 
@@ -108,29 +132,43 @@ def act_bwd(res, act: str):
 # ------------------------------------------------------------- tile tuning
 VMEM_BUDGET = 8 * 1024 * 1024   # conservative per-kernel working-set bound
 MAX_BN = 8
+WEIGHT_BUNDLE_BUDGET = 2 * 1024 * 1024  # per-step streamed-weight bound
 
-# Autotune table: (M, nob, kb, bs) -> (bm, bn).  Entries are measured on
-# real hardware and override the heuristic; the benchmark JSON artifacts
-# (BENCH_*.json) are the data source for adding entries.
-TUNE_TABLE: dict[tuple[int, int, int, int], tuple[int, int]] = {
-    # paper MNIST junction (12544-sample epoch, 1024->512 @ kb=2, bs=128)
+
+def canonical_tune_key(key) -> tuple[int, int, int, int, int, int]:
+    """Normalize a tune-table key to the canonical 6-tuple
+    ``(E, M, nob, kb, bs, n_weight_operands)``.
+
+    Migration shim for pre-unification schemas: PR 1 keyed single-junction
+    entries ``(M, nob, kb, bs)`` (implicitly E=1, one weight operand) and
+    PR 2 keyed expert entries ``(E, M, nob, kb, bs, n_weight_operands)``;
+    a transitional 5-key ``(E, M, nob, kb, bs)`` pins one weight operand.
+    """
+    key = tuple(int(v) for v in key)
+    if len(key) == 4:        # PR 1: (M, nob, kb, bs)
+        return (1, *key, 1)
+    if len(key) == 5:        # transitional: (E, M, nob, kb, bs)
+        return (*key, 1)
+    if len(key) == 6:        # canonical (PR 2 expert schema)
+        return key
+    raise ValueError(f"tune key {key!r}: expected 4, 5 or 6 ints")
+
+
+# Measured entries (BENCH_*.json artifacts are the data source).  Keys may
+# be written in any historical schema — canonical_tune_key migrates them.
+_SEED_ENTRIES: dict[tuple, tuple[int, int]] = {
+    # PR 1, paper MNIST junction (12544-sample epoch, 1024->512 @ kb=2)
     (12544, 4, 2, 128): (512, 4),
-    # transformer FFN up-projection bench shape (1024->4096 @ kb=2, bs=128)
+    # PR 1, transformer FFN up-projection bench shape (1024->4096 @ kb=2)
     (4096, 32, 2, 128): (256, 8),
+    # PR 2, engine.moe bench gated entry kernel: E=4 experts, top-2 routed
+    # 2048 tokens (capacity rows M=1280), 1024->512 @ kb=2, two weight
+    # operands (wg + wi streamed per step)
+    (4, 1280, 4, 2, 128, 2): (256, 4),
 }
 
-
-# Expert-batched autotune table:
-# (E, M, nob, kb, bs, n_weight_operands) -> (bm, bn).  Same contract as
-# TUNE_TABLE with two extra key dims: the expert count, and the number of
-# weight tensors the kernel streams per step (2 for the gated kernel, so
-# its entries are tuned for double the weight-bundle residency).  Entries
-# come from measured engine.moe.* rows in BENCH_*.json artifacts.
-EXPERT_TUNE_TABLE: dict[tuple[int, int, int, int, int, int],
-                        tuple[int, int]] = {
-    # engine.moe bench full shape, gated entry kernel: E=4 experts, top-2
-    # routed 2048 tokens (capacity rows M=1280), 1024->512 @ kb=2, bs=128
-    (4, 1280, 4, 2, 128, 2): (256, 4),
+TUNE_TABLE: dict[tuple[int, int, int, int, int, int], tuple[int, int]] = {
+    canonical_tune_key(k): v for k, v in _SEED_ENTRIES.items()
 }
 
 
@@ -160,41 +198,37 @@ def _choose_bn(nob: int, kb: int, bs: int, itemsize: int,
 
 
 def choose_tiles(M: int, nob: int, kb: int, bs: int, nib: int,
-                 itemsize: int = 4) -> tuple[int, int]:
-    """(bm, bn) for the fused forward: autotune table first, then a VMEM
-    heuristic — bm bounded by the resident x row block, bn the largest
-    power-of-two divisor of nob whose weight bundle fits 2 MB."""
-    hit = TUNE_TABLE.get((M, nob, kb, bs))
+                 itemsize: int = 4, *, E: int = 1,
+                 n_weight_operands: int = 1) -> tuple[int, int]:
+    """(bm, bn) for the fused forward of ANY junction configuration:
+    TUNE_TABLE first (canonical 6-key, legacy keys migrated), then the
+    VMEM heuristic — bm bounded by the resident x row block (one expert's
+    row block is resident per grid step, so the bound is E-independent),
+    bn the largest power-of-two divisor of nob whose weight bundle fits
+    the per-step budget split across the streamed weight tensors."""
+    hit = TUNE_TABLE.get(canonical_tune_key((E, M, nob, kb, bs,
+                                             n_weight_operands)))
     if hit is not None:
         bm, bn = hit
         return max(16, min(bm, _round_up(M, 16))), bn
     bm = _choose_bm(M, nib, bs, itemsize)
-    return bm, _choose_bn(nob, kb, bs, itemsize, 2 * 1024 * 1024)
-
-
-def choose_expert_tiles(E: int, M: int, nob: int, kb: int, bs: int, nib: int,
-                        itemsize: int = 4, n_weight_operands: int = 1
-                        ) -> tuple[int, int]:
-    """(bm, bn) for the expert-batched kernels: EXPERT_TUNE_TABLE first,
-    then the same VMEM heuristic as ``choose_tiles`` — one expert's row
-    block is resident per grid step, so bm is bounded exactly as in the
-    single-junction case; bn's weight-bundle budget is split across the
-    ``n_weight_operands`` streamed weight tensors (2 for the gated
-    kernel, which is also part of the table key)."""
-    hit = EXPERT_TUNE_TABLE.get((E, M, nob, kb, bs, n_weight_operands))
-    if hit is not None:
-        bm, bn = hit
-        return max(16, min(bm, _round_up(M, 16))), bn
-    bm = _choose_bm(M, nib, bs, itemsize)
-    budget = 2 * 1024 * 1024 // max(1, n_weight_operands)
+    budget = WEIGHT_BUNDLE_BUDGET // max(1, n_weight_operands)
     return bm, _choose_bn(nob, kb, bs, itemsize, budget)
 
 
+def bwd_bm(M: int, row_blocks: int, bs: int, itemsize: int) -> int:
+    """Row tile for the backward kernels: the forward's VMEM-residency
+    bound, gcd-clamped to divide the (pre-padded by the forward's bm, a
+    multiple of 16) row count M exactly."""
+    return math.gcd(_choose_bm(M, row_blocks, bs, itemsize), M)
+
+
 def fwd_grid(M: int, nob: int, kb: int, bs: int, nib: int,
-             itemsize: int = 4) -> tuple[int, int]:
-    """Grid of the fused forward for padded row count M — the acceptance
-    bound: exactly (M/bm) * (nob/bn) steps, kb fully in-kernel."""
-    bm, bn = choose_tiles(M, nob, kb, bs, nib, itemsize)
+             itemsize: int = 4, E: int = 1) -> tuple[int, int]:
+    """Per-expert grid of the fused forward for padded row count M — the
+    acceptance bound: exactly (M/bm) * (nob/bn) steps per expert, kb
+    fully in-kernel."""
+    bm, bn = choose_tiles(M, nob, kb, bs, nib, itemsize, E=E)
     return (_round_up(M, bm) // bm, nob // bn)
 
 
@@ -202,235 +236,18 @@ def fwd_grid(M: int, nob: int, kb: int, bs: int, nib: int,
 def fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
         bn: int | None = None, save_pre: bool = False,
         interpret: bool = False):
-    """x [M, nib*bs], w [nob, kb, bs, bs], idx [nob, kb], bias [nob*bs]
-    -> act(x @ W_sparse + bias) [M, nob*bs] (+ pre-activation if save_pre).
-
-    One grid step = one (row-tile x output-bundle): kb fan-in slots reduced
-    in-body into fp32 VMEM scratch, epilogue fused, single output write.
-    """
-    M = x.shape[0]
-    nob, kb, bs, _ = w.shape
-    nib = x.shape[1] // bs
-    cbm, cbn = choose_tiles(M, nob, kb, bs, nib, x.dtype.itemsize)
-    bm = cbm if bm is None else bm
-    bn = cbn if bn is None else bn
-    if nob % bn:
-        bn = 1
-    assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
-
-    def kernel(idx_ref, x_ref, w_ref, b_ref, *rest):
-        acc_ref = rest[-1]
-        o_ref = rest[0]
-        ob0 = pl.program_id(1) * bn
-        for j in range(bn):
-            acc = jnp.zeros((bm, bs), jnp.float32)
-            for k in range(kb):
-                ib = idx_ref[ob0 + j, k]
-                xk = x_ref[:, pl.ds(ib * bs, bs)]
-                acc = acc + jnp.dot(xk, w_ref[j, k],
-                                    preferred_element_type=jnp.float32)
-            acc_ref[:, j * bs:(j + 1) * bs] = acc
-        s = acc_ref[...] + b_ref[...].astype(jnp.float32)
-        if save_pre:
-            rest[1][...] = s.astype(rest[1].dtype)
-        o_ref[...] = act_fwd(s, act).astype(o_ref.dtype)
-
-    out_shape = [jax.ShapeDtypeStruct((M, nob * bs), x.dtype)]
-    out_specs = [pl.BlockSpec((bm, bn * bs), lambda m, o, idx: (m, o))]
-    if save_pre:
-        out_shape.append(jax.ShapeDtypeStruct((M, nob * bs), x.dtype))
-        out_specs.append(pl.BlockSpec((bm, bn * bs), lambda m, o, idx: (m, o)))
-
-    outs = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(M // bm, nob // bn),
-            in_specs=[
-                # full activation row block, resident across bundle steps
-                pl.BlockSpec((bm, nib * bs), lambda m, o, idx: (m, 0)),
-                pl.BlockSpec((bn, kb, bs, bs), lambda m, o, idx: (o, 0, 0, 0)),
-                pl.BlockSpec((1, bn * bs), lambda m, o, idx: (0, o)),
-            ],
-            out_specs=out_specs,
-            scratch_shapes=[pltpu.VMEM((bm, bn * bs), jnp.float32)],
-        ),
-        out_shape=out_shape,
-        interpret=interpret,
-    )(idx, x, w, bias.reshape(1, -1))
-    return (outs[0], outs[1]) if save_pre else (outs[0], None)
-
-
-# ------------------------------------------------------------------ dx
-def dx(dy, wrT, rev_ob, rev_cnt, res, *, act: str = "none",
-       bm: int | None = None, interpret: bool = False):
-    """dy [M, nob*bs] -> dx [M, nib*bs] via the reverse (fan-out) pattern.
-
-    wrT [nib, fb, bs, bs] is the reverse-gathered, pre-transposed weight
-    bundle (wrT[i, f] = w[rev_ob[i,f], rev_t[i,f]].T).  The fb reduction
-    runs in-body with the ragged valid-count mask; the activation gradient
-    is recomputed per dy block from the residual (fused epilogue grad)."""
-    M = dy.shape[0]
-    nib, fb, bs, _ = wrT.shape
-    nob = dy.shape[1] // bs
-    has_res = act != "none"
-    row_blocks = nob * (2 if has_res else 1)
-    if bm is None:
-        # M arrives pre-padded by the forward's bm (a multiple of 16);
-        # gcd keeps our (possibly different) choice an exact divisor
-        bm = math.gcd(_choose_bm(M, row_blocks, bs, dy.dtype.itemsize), M)
-    assert M % bm == 0
-
-    def kernel(rev_ob_ref, rev_cnt_ref, *refs):
-        if has_res:
-            dy_ref, res_ref, wrt_ref, o_ref = refs
-        else:
-            dy_ref, wrt_ref, o_ref = refs
-        i = pl.program_id(1)
-        cnt = rev_cnt_ref[i]
-        acc = jnp.zeros((bm, bs), jnp.float32)
-        for f in range(fb):
-            ob = rev_ob_ref[i, f]
-            dyb = dy_ref[:, pl.ds(ob * bs, bs)]
-            if has_res:
-                g = act_bwd(res_ref[:, pl.ds(ob * bs, bs)].astype(jnp.float32),
-                            act)
-                dz = (dyb.astype(jnp.float32) * g).astype(dyb.dtype)
-            else:
-                dz = dyb
-            part = jnp.dot(dz, wrt_ref[0, f],
-                           preferred_element_type=jnp.float32)
-            valid = (f < cnt).astype(jnp.float32)
-            acc = acc + part * valid
-        o_ref[...] = acc.astype(o_ref.dtype)
-
-    in_specs = [pl.BlockSpec((bm, nob * bs), lambda m, i, rob, rc: (m, 0))]
-    inputs = [dy]
-    if has_res:
-        in_specs.append(pl.BlockSpec((bm, nob * bs),
-                                     lambda m, i, rob, rc: (m, 0)))
-        inputs.append(res)
-    in_specs.append(pl.BlockSpec((1, fb, bs, bs),
-                                 lambda m, i, rob, rc: (i, 0, 0, 0)))
-    inputs.append(wrT)
-
-    return pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(M // bm, nib),
-            in_specs=in_specs,
-            out_specs=pl.BlockSpec((bm, bs), lambda m, i, rob, rc: (m, i)),
-        ),
-        out_shape=jax.ShapeDtypeStruct((M, nib * bs), dy.dtype),
-        interpret=interpret,
-    )(rev_ob, rev_cnt, *inputs)
-
-
-# ------------------------------------------------------------------ dw (+db)
-def dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
-       bm: int | None = None, interpret: bool = False):
-    """(dw [nob, kb, bs, bs] fp32, db [nob*bs] fp32 or None) — the M
-    reduction runs innermost into fp32 VMEM scratch (single output write
-    per output block, no read-modify-write).  The kb gathered input blocks
-    arrive through scalar-prefetch BlockSpec index_maps — the interleaver
-    as a DMA descriptor — and, for biased layers, db accumulates from the
-    same fused dz prologue (with_bias=False skips it entirely)."""
-    M = x.shape[0]
-    nob, kb = idx.shape
-    bs = dy.shape[1] // nob
-    has_res = act != "none"
-    if bm is None:
-        bm = math.gcd(_choose_bm(M, kb + 3, bs, x.dtype.itemsize), M)
-    assert M % bm == 0
-    nm = M // bm
-
-    def kernel(idx_ref, *refs):
-        n_in = (2 if has_res else 1) + kb
-        dy_ref = refs[0]
-        res_ref = refs[1] if has_res else None
-        x_refs = refs[n_in - kb:n_in]
-        if with_bias:
-            dw_ref, db_ref, accw_ref, accb_ref = refs[n_in:]
-        else:
-            dw_ref, accw_ref = refs[n_in:]
-        m = pl.program_id(1)
-
-        @pl.when(m == 0)
-        def _zero():
-            accw_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
-            if with_bias:
-                accb_ref[...] = jnp.zeros((1, bs), jnp.float32)
-
-        if has_res:
-            g = act_bwd(res_ref[...].astype(jnp.float32), act)
-            dzf = dy_ref[...].astype(jnp.float32) * g
-            dz = dzf.astype(dy_ref.dtype)
-        else:
-            dzf = None
-            dz = dy_ref[...]
-        for k in range(kb):
-            accw_ref[k] = accw_ref[k] + jnp.dot(
-                x_refs[k][...].T, dz, preferred_element_type=jnp.float32)
-        if with_bias:
-            s = dzf if dzf is not None else dy_ref[...].astype(jnp.float32)
-            accb_ref[...] = accb_ref[...] + jnp.sum(s, axis=0, keepdims=True)
-
-        @pl.when(m == nm - 1)
-        def _flush():
-            dw_ref[...] = accw_ref[...][None]
-            if with_bias:
-                db_ref[...] = accb_ref[...]
-
-    in_specs = [pl.BlockSpec((bm, bs), lambda o, m, idx: (m, o))]
-    inputs = [dy]
-    if has_res:
-        in_specs.append(pl.BlockSpec((bm, bs), lambda o, m, idx: (m, o)))
-        inputs.append(res)
-    for k in range(kb):
-        in_specs.append(pl.BlockSpec(
-            (bm, bs), lambda o, m, idx, k=k: (m, idx[o, k])))
-        inputs.append(x)
-
-    out_specs = [pl.BlockSpec((1, kb, bs, bs), lambda o, m, idx: (o, 0, 0, 0))]
-    out_shape = [jax.ShapeDtypeStruct((nob, kb, bs, bs), jnp.float32)]
-    scratch = [pltpu.VMEM((kb, bs, bs), jnp.float32)]
-    if with_bias:
-        out_specs.append(pl.BlockSpec((1, bs), lambda o, m, idx: (o, 0)))
-        out_shape.append(jax.ShapeDtypeStruct((nob, bs), jnp.float32))
-        scratch.append(pltpu.VMEM((1, bs), jnp.float32))
-
-    outs = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(nob, nm),
-            in_specs=in_specs,
-            out_specs=out_specs,
-            scratch_shapes=scratch,
-        ),
-        out_shape=out_shape,
-        interpret=interpret,
-    )(idx, *inputs)
-    if with_bias:
-        return outs[0], outs[1].reshape(-1)
-    return outs[0], None
-
-
-# ==================================================== expert-batched kernels
-def expert_fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
-               bn: int | None = None, save_pre: bool = False,
-               interpret: bool = False):
     """x [E, M, nib*bs], w [E, nob, kb, bs, bs], shared idx [nob, kb],
-    bias [E, nob*bs] -> act(x_e @ W_e + b_e) [E, M, nob*bs] per expert.
+    bias [E, nob*bs] -> act(x_e @ W_e + b_e) [E, M, nob*bs] per junction
+    unit (+ pre-activation if save_pre).
 
     Grid (E, M/bm, nob/bn): the expert dimension is the outermost grid
     axis; the pattern rides once in scalar prefetch and is reused by every
-    expert — the paper's "one junction shape, replicated units" claim."""
+    unit.  One step computes bn output tiles — the kb fan-in slots reduce
+    in-body into fp32 VMEM scratch, epilogue fused, single output write."""
     E, M, _ = x.shape
     _, nob, kb, bs, _ = w.shape
     nib = x.shape[2] // bs
-    cbm, cbn = choose_expert_tiles(E, M, nob, kb, bs, nib, x.dtype.itemsize)
+    cbm, cbn = choose_tiles(M, nob, kb, bs, nib, x.dtype.itemsize, E=E)
     bm = cbm if bm is None else bm
     bn = cbn if bn is None else bn
     if nob % bn:
@@ -467,6 +284,7 @@ def expert_fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
             num_scalar_prefetch=1,
             grid=(E, M // bm, nob // bn),
             in_specs=[
+                # full activation row block, resident across bundle steps
                 pl.BlockSpec((1, bm, nib * bs), lambda e, m, o, idx: (e, m, 0)),
                 pl.BlockSpec((1, bn, kb, bs, bs),
                              lambda e, m, o, idx: (e, o, 0, 0, 0)),
@@ -481,19 +299,19 @@ def expert_fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
     return (outs[0], outs[1]) if save_pre else (outs[0], None)
 
 
-def expert_gated_fwd(x, wg, wi, idx, *, bm: int | None = None,
-                     bn: int | None = None, save_res: bool = False,
-                     interpret: bool = False):
-    """Fused SiLU-gate expert FFN entry: silu(x_e @ Wg_e) * (x_e @ Wi_e)
-    in one pass — both kb fan-in reductions accumulate side by side in
-    VMEM scratch, the gate epilogue fuses before the single output write.
+def gated_fwd(x, wg, wi, idx, *, bm: int | None = None,
+              bn: int | None = None, save_res: bool = False,
+              interpret: bool = False):
+    """Fused SiLU-gate FFN entry: silu(x_e @ Wg_e) * (x_e @ Wi_e) in one
+    pass — both kb fan-in reductions accumulate side by side in VMEM
+    scratch, the gate epilogue fuses before the single output write.
     Returns (h, g_pre, u) — the pre-activation g and the linear branch u
     are emitted only when save_res (backward residuals)."""
     E, M, _ = x.shape
     _, nob, kb, bs, _ = wg.shape
     nib = x.shape[2] // bs
-    cbm, cbn = choose_expert_tiles(E, M, nob, kb, bs, nib, x.dtype.itemsize,
-                                   n_weight_operands=2)
+    cbm, cbn = choose_tiles(M, nob, kb, bs, nib, x.dtype.itemsize, E=E,
+                            n_weight_operands=2)
     bm = cbm if bm is None else bm
     bn = cbn if bn is None else bn
     if nob % bn:
@@ -553,131 +371,177 @@ def expert_gated_fwd(x, wg, wi, idx, *, bm: int | None = None,
     return (outs[0], outs[1], outs[2]) if save_res else (outs[0], None, None)
 
 
-def expert_dx(dy, wrT, rev_ob, rev_cnt, res, *, act: str = "none",
-              bm: int | None = None, interpret: bool = False):
+# ------------------------------------------------------------------ dx
+def _rev_dot(dz, wb):
+    """dz [bm, bs_out] x forward-layout bundle wb [bs_in, bs_out] ->
+    [bm, bs_in]: contract both on their LAST dim (dz @ wb.T without a
+    transpose copy of the DMA'd tile)."""
+    return jax.lax.dot_general(dz, wb, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def dx(dy, w, rev_ob, rev_t, rev_cnt, res, *, act: str = "none",
+       bm: int | None = None, interpret: bool = False):
     """dy [E, M, nob*bs] -> dx [E, M, nib*bs] via the shared reverse
-    pattern; wrT [E, nib, fb, bs, bs] per-expert reverse-gathered
-    pre-transposed bundles.  Grid (E, M/bm, nib)."""
+    (fan-out) pattern against the forward-layout weights w
+    [E, nob, kb, bs, bs].
+
+    The reverse weight bundles are DMA'd in-kernel: w stays in HBM
+    (memory_space=ANY) and each w[e, rev_ob[i,f], rev_t[i,f]] tile is
+    double-buffered HBM→VMEM with make_async_copy, offsets from the
+    scalar-prefetched reverse pattern — the XLA w[rev_ob, rev_t]
+    pre-gather (a w-sized round-trip per backward call) is gone.  Padded
+    slots (f >= rev_cnt[i], (0,0) sentinels) prefetch an in-bounds bundle
+    whose contribution is where-masked, so zero-fan-out input blocks
+    yield exact-zero dx rows even for non-finite dy.  The activation
+    gradient is recomputed per dy block from the residual."""
     E, M, _ = dy.shape
-    _, nib, fb, bs, _ = wrT.shape
-    nob = dy.shape[2] // bs
+    _, nob, kb, bs, _ = w.shape
+    nib, fb = rev_ob.shape
     has_res = act != "none"
-    row_blocks = nob * (2 if has_res else 1)
     if bm is None:
-        bm = math.gcd(_choose_bm(M, row_blocks, bs, dy.dtype.itemsize), M)
+        bm = bwd_bm(M, nob * (2 if has_res else 1), bs, dy.dtype.itemsize)
     assert M % bm == 0
 
-    def kernel(rev_ob_ref, rev_cnt_ref, *refs):
+    def kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, *refs):
         if has_res:
-            dy_ref, res_ref, wrt_ref, o_ref = refs
+            dy_ref, res_ref, w_hbm, o_ref, wbuf, sems = refs
         else:
-            dy_ref, wrt_ref, o_ref = refs
+            dy_ref, w_hbm, o_ref, wbuf, sems = refs
+            res_ref = None
+        e = pl.program_id(0)
         i = pl.program_id(2)
         cnt = rev_cnt_ref[i]
+
+        def bundle(slot, f):
+            return pltpu.make_async_copy(
+                w_hbm.at[e, rev_ob_ref[i, f], rev_t_ref[i, f]],
+                wbuf.at[slot], sems.at[slot])
+
+        bundle(0, 0).start()
         acc = jnp.zeros((bm, bs), jnp.float32)
         for f in range(fb):
+            if f + 1 < fb:
+                bundle((f + 1) % 2, f + 1).start()
+            bundle(f % 2, f).wait()
             ob = rev_ob_ref[i, f]
             dyb = dy_ref[0, :, pl.ds(ob * bs, bs)]
             if has_res:
-                g = act_bwd(
+                gr = act_bwd(
                     res_ref[0, :, pl.ds(ob * bs, bs)].astype(jnp.float32), act)
-                dz = (dyb.astype(jnp.float32) * g).astype(dyb.dtype)
+                dz = (dyb.astype(jnp.float32) * gr).astype(dyb.dtype)
             else:
                 dz = dyb
-            part = jnp.dot(dz, wrt_ref[0, 0, f],
-                           preferred_element_type=jnp.float32)
-            valid = (f < cnt).astype(jnp.float32)
-            acc = acc + part * valid
+            acc = acc + jnp.where(f < cnt, _rev_dot(dz, wbuf[f % 2]), 0.0)
         o_ref[0] = acc.astype(o_ref.dtype)
 
     in_specs = [pl.BlockSpec((1, bm, nob * bs),
-                             lambda e, m, i, rob, rc: (e, m, 0))]
+                             lambda e, m, i, *_: (e, m, 0))]
     inputs = [dy]
     if has_res:
         in_specs.append(pl.BlockSpec((1, bm, nob * bs),
-                                     lambda e, m, i, rob, rc: (e, m, 0)))
+                                     lambda e, m, i, *_: (e, m, 0)))
         inputs.append(res)
-    in_specs.append(pl.BlockSpec((1, 1, fb, bs, bs),
-                                 lambda e, m, i, rob, rc: (e, i, 0, 0, 0)))
-    inputs.append(wrT)
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+    inputs.append(w)
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(E, M // bm, nib),
             in_specs=in_specs,
             out_specs=pl.BlockSpec((1, bm, bs),
-                                   lambda e, m, i, rob, rc: (e, m, i)),
+                                   lambda e, m, i, *_: (e, m, i)),
+            scratch_shapes=[pltpu.VMEM((2, bs, bs), w.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
         ),
         out_shape=jax.ShapeDtypeStruct((E, M, nib * bs), dy.dtype),
         interpret=interpret,
-    )(rev_ob, rev_cnt, *inputs)
+    )(rev_ob, rev_t, rev_cnt, *inputs)
 
 
-def expert_gated_dx(dh, wgrT, wirT, rev_ob, rev_cnt, g, u, *,
-                    bm: int | None = None, interpret: bool = False):
-    """Fused two-branch dx for the gated expert FFN: both branch grads
+def gated_dx(dh, wg, wi, rev_ob, rev_t, rev_cnt, g, u, *,
+             bm: int | None = None, interpret: bool = False):
+    """Fused two-branch dx for the gated FFN: both branch grads
     (dz_g = dh * u * silu'(g), dz_u = dh * silu(g)) are recomputed per dy
     block from the saved residuals and reduced against their reverse
-    bundles in the same fb loop — one pass over dh/g/u per input block."""
+    bundles in the same fb loop — one pass over dh/g/u per input block,
+    with BOTH weight streams double-buffered HBM→VMEM in-kernel."""
     E, M, _ = dh.shape
-    _, nib, fb, bs, _ = wgrT.shape
-    nob = dh.shape[2] // bs
+    _, nob, kb, bs, _ = wg.shape
+    nib, fb = rev_ob.shape
     if bm is None:
-        bm = math.gcd(_choose_bm(M, 3 * nob, bs, dh.dtype.itemsize), M)
+        bm = bwd_bm(M, 3 * nob, bs, dh.dtype.itemsize)
     assert M % bm == 0
 
-    def kernel(rev_ob_ref, rev_cnt_ref, dh_ref, g_ref, u_ref, wgrt_ref,
-               wirt_ref, o_ref):
+    def kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, dh_ref, g_ref, u_ref,
+               wg_hbm, wi_hbm, o_ref, wgbuf, wibuf, sems):
+        e = pl.program_id(0)
         i = pl.program_id(2)
         cnt = rev_cnt_ref[i]
+
+        def bundles(slot, f):
+            ob = rev_ob_ref[i, f]
+            t = rev_t_ref[i, f]
+            return (pltpu.make_async_copy(wg_hbm.at[e, ob, t],
+                                          wgbuf.at[slot], sems.at[slot, 0]),
+                    pltpu.make_async_copy(wi_hbm.at[e, ob, t],
+                                          wibuf.at[slot], sems.at[slot, 1]))
+
+        for c in bundles(0, 0):
+            c.start()
         acc = jnp.zeros((bm, bs), jnp.float32)
         for f in range(fb):
-            ob = rev_ob_ref[i, f]
-            cols = pl.ds(ob * bs, bs)
+            if f + 1 < fb:
+                for c in bundles((f + 1) % 2, f + 1):
+                    c.start()
+            for c in bundles(f % 2, f):
+                c.wait()
+            cols = pl.ds(rev_ob_ref[i, f] * bs, bs)
             dhb = dh_ref[0, :, cols].astype(jnp.float32)
             gb = g_ref[0, :, cols].astype(jnp.float32)
             ub = u_ref[0, :, cols].astype(jnp.float32)
             dzg = (dhb * ub * act_bwd(gb, "silu")).astype(dh_ref.dtype)
             dzu = (dhb * act_fwd(gb, "silu")).astype(dh_ref.dtype)
-            part = (jnp.dot(dzg, wgrt_ref[0, 0, f],
-                            preferred_element_type=jnp.float32)
-                    + jnp.dot(dzu, wirt_ref[0, 0, f],
-                              preferred_element_type=jnp.float32))
-            valid = (f < cnt).astype(jnp.float32)
-            acc = acc + part * valid
+            part = _rev_dot(dzg, wgbuf[f % 2]) + _rev_dot(dzu, wibuf[f % 2])
+            acc = acc + jnp.where(f < cnt, part, 0.0)
         o_ref[0] = acc.astype(o_ref.dtype)
 
-    row = pl.BlockSpec((1, bm, nob * bs), lambda e, m, i, rob, rc: (e, m, 0))
-    wspec = pl.BlockSpec((1, 1, fb, bs, bs),
-                         lambda e, m, i, rob, rc: (e, i, 0, 0, 0))
+    row = pl.BlockSpec((1, bm, nob * bs), lambda e, m, i, *_: (e, m, 0))
+    hbm = pl.BlockSpec(memory_space=pltpu.ANY)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(E, M // bm, nib),
-            in_specs=[row, row, row, wspec, wspec],
+            in_specs=[row, row, row, hbm, hbm],
             out_specs=pl.BlockSpec((1, bm, bs),
-                                   lambda e, m, i, rob, rc: (e, m, i)),
+                                   lambda e, m, i, *_: (e, m, i)),
+            scratch_shapes=[pltpu.VMEM((2, bs, bs), wg.dtype),
+                            pltpu.VMEM((2, bs, bs), wi.dtype),
+                            pltpu.SemaphoreType.DMA((2, 2))],
         ),
         out_shape=jax.ShapeDtypeStruct((E, M, nib * bs), dh.dtype),
         interpret=interpret,
-    )(rev_ob, rev_cnt, dh, g, u, wgrT, wirT)
+    )(rev_ob, rev_t, rev_cnt, dh, g, u, wg, wi)
 
 
-def expert_dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
-              bm: int | None = None, interpret: bool = False):
+# ------------------------------------------------------------------ dw (+db)
+def dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
+       bm: int | None = None, interpret: bool = False):
     """(dw [E, nob, kb, bs, bs] fp32, db [E, nob*bs] fp32 or None) — grid
     (E, nob, M/bm) with the M reduction innermost into fp32 VMEM scratch,
-    flushed once per (expert, output block); per-expert db accumulates in
-    the same pass."""
+    flushed once per (unit, output block).  The kb gathered input blocks
+    arrive through scalar-prefetch BlockSpec index_maps — the interleaver
+    as a DMA descriptor — and, for biased layers, db accumulates from the
+    same fused dz prologue (with_bias=False skips it entirely)."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dy.shape[2] // nob
     has_res = act != "none"
     if bm is None:
-        bm = math.gcd(_choose_bm(M, kb + 3, bs, x.dtype.itemsize), M)
+        bm = bwd_bm(M, kb + 3, bs, x.dtype.itemsize)
     assert M % bm == 0
     nm = M // bm
 
@@ -755,17 +619,17 @@ def expert_dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
     return outs[0], None
 
 
-def expert_gated_dw(x, dh, idx, g, u, *, bm: int | None = None,
-                    interpret: bool = False):
+def gated_dw(x, dh, idx, g, u, *, bm: int | None = None,
+             interpret: bool = False):
     """(dwg, dwi) [E, nob, kb, bs, bs] fp32 for the fused gated FFN — the
     two branch grads are recomputed in the prologue from the (g, u)
     residuals and both M reductions accumulate innermost into separate
-    VMEM scratch buffers, flushed once per (expert, output block)."""
+    VMEM scratch buffers, flushed once per (unit, output block)."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dh.shape[2] // nob
     if bm is None:
-        bm = math.gcd(_choose_bm(M, kb + 5, bs, x.dtype.itemsize), M)
+        bm = bwd_bm(M, kb + 5, bs, x.dtype.itemsize)
     assert M % bm == 0
     nm = M // bm
 

@@ -1,17 +1,28 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``block_sparse_matmul`` carries a custom_vjp wired to the fused dx/dw
-kernels — the full paper pipeline (FF eq. (1) with the activation fused
-into the edge pipeline, BP eq. (2), UP gradient of eq. (3)) runs through
-Pallas.  The activation gradient is recomputed inside the backward
-kernels' prologues from the saved residual (y, or the pre-activation for
-silu/gelu), so the elementwise grad tensor never round-trips HBM.
+``junction_matmul`` is the ONE entry point for every pre-defined-sparse
+junction — the paper's reconfigurable edge datapath as a single
+custom_vjp.  A ``KernelSpec`` (expert count E, gate flag, activation,
+tiles) selects the configuration; the kernels themselves are E-generic
+(kernels/block_sparse_matmul.py), so:
 
-``expert_block_sparse_matmul`` / ``expert_gated_matmul`` are the
-expert-batched counterparts for MoE expert FFNs (models/moe.py): one
-shared block pattern, per-expert weights [E, nob, kb, bs, bs], grid
-(E, M/bm, nob/bn), with the SwiGLU gate fused into a single forward pass
-and matching custom_vjps through the expert dx/dw kernels.
+* a single dense-model junction (``core/sparse_linear.apply``) is the
+  ``E=1`` case — 4-D weights are squeezed in, the result squeezed out;
+* MoE expert FFNs (``models/moe.moe_apply``) pass 5-D per-expert weights
+  ``[E, nob, kb, bs, bs]`` sharing one block pattern;
+* ``wi=`` switches on the fused SwiGLU gate ``silu(x@w) * (x@wi)`` with
+  both branch grads recomputed from the saved (g, u) residuals.
+
+The backward runs the full paper pipeline in Pallas: BP (eq. (2))
+through ``dx`` — whose reverse weight bundles are DMA'd HBM→VMEM inside
+the kernel (double-buffered, offsets from the scalar-prefetched reverse
+pattern), NOT pre-gathered in XLA — and UP (gradient of eq. (3)) through
+``dw``, with the activation gradient recomputed in the kernel prologues
+from the saved residual so the elementwise grad tensor never round-trips
+HBM.
+
+``block_sparse_matmul`` / ``expert_block_sparse_matmul`` /
+``expert_gated_matmul`` remain as thin aliases over ``junction_matmul``.
 
 Kernels execute in interpret mode off-TPU (the container is CPU-only);
 on TPU ``interpret=False`` (the default auto-detects the backend).
@@ -56,78 +67,121 @@ def _pad_rows(x, bm):
     return x, M
 
 
-# ------------------------------------------------------------ block sparse
-class _Spec(NamedTuple):
-    """Static (hashable) kernel configuration for the custom_vjp."""
-    act: str
-    bm: int
-    bn: int
-    interpret: bool
+# --------------------------------------------------------- junction matmul
+class KernelSpec(NamedTuple):
+    """Static (hashable) configuration of the unified junction custom_vjp:
+    the paper's 'reconfigure the one datapath per junction' knob set."""
+    E: int              # junction units sharing the pattern (1 = single)
+    gated: bool         # fused SwiGLU gate (two weight operands, silu fixed)
+    act: str            # fused epilogue activation ("none" when gated)
+    bm: int             # row tile
+    bn: int             # output-bundle tile
     has_bias: bool
+    interpret: bool
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _bsm_core(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
-    y, _ = bsm.fwd(x, w, idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
+def _junction_core(spec, x, ws, b, idx, rev_ob, rev_t, rev_cnt):
+    """x [E, M, nib*bs], ws tuple of 1 (plain) or 2 (gated) weight tensors
+    [E, nob, kb, bs, bs], b [E, nob*bs] -> y [E, M, nob*bs]."""
+    if spec.gated:
+        h, _, _ = bsm.gated_fwd(x, ws[0], ws[1], idx, bm=spec.bm, bn=spec.bn,
+                                save_res=False, interpret=spec.interpret)
+        return h
+    y, _ = bsm.fwd(x, ws[0], idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
                    save_pre=False, interpret=spec.interpret)
     return y
 
 
-def _bsm_fwd(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
+def _junction_fwd(spec, x, ws, b, idx, rev_ob, rev_t, rev_cnt):
+    if spec.gated:
+        h, g, u = bsm.gated_fwd(x, ws[0], ws[1], idx, bm=spec.bm, bn=spec.bn,
+                                save_res=True, interpret=spec.interpret)
+        return h, (x, ws, (g, u), idx, rev_ob, rev_t, rev_cnt)
     needs_pre = spec.act in bsm.ACT_NEEDS_PRE
-    y, pre = bsm.fwd(x, w, idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
+    y, pre = bsm.fwd(x, ws[0], idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
                      save_pre=needs_pre, interpret=spec.interpret)
     res = pre if needs_pre else (y if spec.act != "none" else None)
-    return y, (x, w, res, idx, rev_ob, rev_t, rev_cnt)
+    return y, (x, ws, res, idx, rev_ob, rev_t, rev_cnt)
 
 
-def _bsm_bwd(spec, saved, dy):
-    x, w, res, idx, rev_ob, rev_t, rev_cnt = saved
-    # reverse-gathered, pre-transposed weight bundles: one XLA tile-gather
-    # per backward call (w-sized traffic, dominated by the activation
-    # streams the kernels save by fusing dz).
-    wrT = jnp.swapaxes(w[rev_ob, rev_t], -1, -2).astype(dy.dtype)
-    dxv = bsm.dx(dy, wrT, rev_ob, rev_cnt, res, act=spec.act,
+def _junction_bwd(spec, saved, dy):
+    x, ws, res, idx, rev_ob, rev_t, rev_cnt = saved
+    # no XLA w[rev_ob, rev_t] pre-gather here: dx DMAs the reverse weight
+    # bundles HBM→VMEM inside the kernel from the forward-layout weights.
+    if spec.gated:
+        g, u = res
+        dxv = bsm.gated_dx(dy, ws[0], ws[1], rev_ob, rev_t, rev_cnt, g, u,
+                           interpret=spec.interpret)
+        dwg, dwi = bsm.gated_dw(x, dy, idx, g, u, interpret=spec.interpret)
+        dws = (dwg.astype(ws[0].dtype), dwi.astype(ws[1].dtype))
+        db = jnp.zeros((dy.shape[0], dy.shape[2]), jnp.float32)
+        return dxv, dws, db, None, None, None, None
+    dxv = bsm.dx(dy, ws[0], rev_ob, rev_t, rev_cnt, res, act=spec.act,
                  interpret=spec.interpret)
     dwv, dbv = bsm.dw(x, dy, idx, res, act=spec.act,
                       with_bias=spec.has_bias, interpret=spec.interpret)
     if dbv is None:  # bias-free layer: the zero-bias operand gets zeros
-        dbv = jnp.zeros((dy.shape[1],), jnp.float32)
-    return dxv, dwv.astype(w.dtype), dbv, None, None, None, None
+        dbv = jnp.zeros((dy.shape[0], dy.shape[2]), jnp.float32)
+    return dxv, (dwv.astype(ws[0].dtype),), dbv, None, None, None, None
 
 
-_bsm_core.defvjp(_bsm_fwd, _bsm_bwd)
+_junction_core.defvjp(_junction_fwd, _junction_bwd)
 
 
-def block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,
-                        act: str = "none", interpret: bool | None = None,
-                        bm: int | None = None, bn: int | None = None):
-    """x [..., n_in] -> act(x @ W_sparse + bias) [..., n_out] through the
-    pre-defined block pattern, bias + activation fused into the kernel
-    epilogue."""
+def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
+                    act: str = "none", interpret: bool | None = None,
+                    bm: int | None = None, bn: int | None = None):
+    """The unified junction: y = act(x @ W_sparse + bias) through the
+    pre-defined block pattern, every configuration through ONE custom_vjp.
+
+    * ``w.ndim == 4`` (``[nob, kb, bs, bs]``): single junction.  x may
+      carry any leading dims ``[..., n_in]``; runs as the kernels' E=1
+      case and is squeezed back to ``[..., n_out]``.
+    * ``w.ndim == 5`` (``[E, nob, kb, bs, bs]``): E junction units
+      sharing the pattern (MoE experts).  x ``[E, M, n_in]``, bias
+      ``[E, n_out]`` -> y ``[E, M, n_out]``.
+    * ``wi=`` (same shape as w): fused SwiGLU gate
+      ``silu(x @ w) * (x @ wi)`` — one forward pass, two-branch fused
+      backward; ``act``/``bias`` must stay at their defaults.
+    """
     interpret = _auto_interpret() if interpret is None else interpret
-    lead = x.shape[:-1]
-    nob, kb, bs, _ = w.shape
-    nib = x.shape[-1] // bs
-    x2 = x.reshape(-1, x.shape[-1])
+    gated = wi is not None
+    if gated and (bias is not None or act != "none"):
+        raise ValueError("gated junction fixes act=silu-gate and takes no bias")
+    single = w.ndim == 4
+    if single:
+        lead = x.shape[:-1]
+        x3 = x.reshape(1, -1, x.shape[-1])
+        w5 = w[None]
+        wi5 = wi[None] if gated else None
+        b2 = None if bias is None else bias[None]
+    else:
+        lead = None
+        x3, w5, wi5, b2 = x, w, wi, bias
+    E, M0, _ = x3.shape
+    _, nob, kb, bs, _ = w5.shape
+    nib = x3.shape[-1] // bs
     if bm is None or bn is None:
-        cbm, cbn = bsm.choose_tiles(x2.shape[0], nob, kb, bs, nib,
-                                    x.dtype.itemsize)
+        cbm, cbn = bsm.choose_tiles(M0, nob, kb, bs, nib, x.dtype.itemsize,
+                                    E=E, n_weight_operands=2 if gated else 1)
         bm = cbm if bm is None else bm
         bn = cbn if bn is None else bn
     if nob % bn:
         bn = 1
-    x2, M = _pad_rows(x2, bm)
-    b = (jnp.zeros((nob * bs,), x.dtype) if bias is None
-         else bias.astype(x.dtype))
-    spec = _Spec(act=act, bm=bm, bn=bn, interpret=interpret,
-                 has_bias=bias is not None)
-    y = _bsm_core(spec, x2, w.astype(x.dtype), b, idx, rev_ob, rev_t, rev_cnt)
-    return y[:M].reshape(*lead, -1)
+    x3, M = _pad_junction_rows(x3, bm)
+    b = (jnp.zeros((E, nob * bs), x.dtype) if b2 is None
+         else b2.astype(x.dtype))
+    ws = ((w5.astype(x.dtype), wi5.astype(x.dtype)) if gated
+          else (w5.astype(x.dtype),))
+    spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
+                      has_bias=bias is not None, interpret=interpret)
+    y = _junction_core(spec, x3, ws, b, idx, rev_ob, rev_t, rev_cnt)
+    y = y[:, :M]
+    return y.reshape(*lead, nob * bs) if single else y
 
 
-# ------------------------------------------------ expert-batched block sparse
-def _pad_expert_rows(x, bm):
+def _pad_junction_rows(x, bm):
     M = x.shape[1]
     pad = (-M) % bm
     if pad:
@@ -135,122 +189,29 @@ def _pad_expert_rows(x, bm):
     return x, M
 
 
-def _rev_weight_bundles(w, rev_ob, rev_t, dtype):
-    """Per-expert reverse-gathered, pre-transposed bundles
-    [E, nib, fb, bs, bs] (one XLA tile-gather per backward call)."""
-    return jnp.swapaxes(w[:, rev_ob, rev_t], -1, -2).astype(dtype)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _ebsm_core(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
-    y, _ = bsm.expert_fwd(x, w, idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
-                          save_pre=False, interpret=spec.interpret)
-    return y
-
-
-def _ebsm_fwd(spec, x, w, b, idx, rev_ob, rev_t, rev_cnt):
-    needs_pre = spec.act in bsm.ACT_NEEDS_PRE
-    y, pre = bsm.expert_fwd(x, w, idx, b, act=spec.act, bm=spec.bm,
-                            bn=spec.bn, save_pre=needs_pre,
-                            interpret=spec.interpret)
-    res = pre if needs_pre else (y if spec.act != "none" else None)
-    return y, (x, w, res, idx, rev_ob, rev_t, rev_cnt)
-
-
-def _ebsm_bwd(spec, saved, dy):
-    x, w, res, idx, rev_ob, rev_t, rev_cnt = saved
-    wrT = _rev_weight_bundles(w, rev_ob, rev_t, dy.dtype)
-    dxv = bsm.expert_dx(dy, wrT, rev_ob, rev_cnt, res, act=spec.act,
-                        interpret=spec.interpret)
-    dwv, dbv = bsm.expert_dw(x, dy, idx, res, act=spec.act,
-                             with_bias=spec.has_bias,
-                             interpret=spec.interpret)
-    if dbv is None:  # bias-free experts: the zero-bias operand gets zeros
-        dbv = jnp.zeros((dy.shape[0], dy.shape[2]), jnp.float32)
-    return dxv, dwv.astype(w.dtype), dbv, None, None, None, None
-
-
-_ebsm_core.defvjp(_ebsm_fwd, _ebsm_bwd)
+def block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,
+                        act: str = "none", interpret: bool | None = None,
+                        bm: int | None = None, bn: int | None = None):
+    """Single-junction alias: x [..., n_in], w [nob, kb, bs, bs]."""
+    return junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=bias,
+                           act=act, interpret=interpret, bm=bm, bn=bn)
 
 
 def expert_block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,
                                act: str = "none",
                                interpret: bool | None = None,
                                bm: int | None = None, bn: int | None = None):
-    """x [E, M, n_in] -> act(x_e @ W_e + b_e) [E, M, n_out]: per-expert
-    weights w [E, nob, kb, bs, bs] through ONE shared block pattern, grid
-    (E, M/bm, nob/bn), custom_vjp through the expert dx/dw kernels."""
-    interpret = _auto_interpret() if interpret is None else interpret
-    E, M0, _ = x.shape
-    _, nob, kb, bs, _ = w.shape
-    nib = x.shape[-1] // bs
-    if bm is None or bn is None:
-        cbm, cbn = bsm.choose_expert_tiles(E, M0, nob, kb, bs, nib,
-                                           x.dtype.itemsize)
-        bm = cbm if bm is None else bm
-        bn = cbn if bn is None else bn
-    if nob % bn:
-        bn = 1
-    x2, M = _pad_expert_rows(x, bm)
-    b = (jnp.zeros((E, nob * bs), x.dtype) if bias is None
-         else bias.astype(x.dtype))
-    spec = _Spec(act=act, bm=bm, bn=bn, interpret=interpret,
-                 has_bias=bias is not None)
-    y = _ebsm_core(spec, x2, w.astype(x.dtype), b, idx, rev_ob, rev_t, rev_cnt)
-    return y[:, :M]
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _egated_core(spec, x, wg, wi, idx, rev_ob, rev_t, rev_cnt):
-    h, _, _ = bsm.expert_gated_fwd(x, wg, wi, idx, bm=spec.bm, bn=spec.bn,
-                                   save_res=False, interpret=spec.interpret)
-    return h
-
-
-def _egated_fwd(spec, x, wg, wi, idx, rev_ob, rev_t, rev_cnt):
-    h, g, u = bsm.expert_gated_fwd(x, wg, wi, idx, bm=spec.bm, bn=spec.bn,
-                                   save_res=True, interpret=spec.interpret)
-    return h, (x, wg, wi, g, u, idx, rev_ob, rev_t, rev_cnt)
-
-
-def _egated_bwd(spec, saved, dh):
-    x, wg, wi, g, u, idx, rev_ob, rev_t, rev_cnt = saved
-    wgrT = _rev_weight_bundles(wg, rev_ob, rev_t, dh.dtype)
-    wirT = _rev_weight_bundles(wi, rev_ob, rev_t, dh.dtype)
-    dxv = bsm.expert_gated_dx(dh, wgrT, wirT, rev_ob, rev_cnt, g, u,
-                              interpret=spec.interpret)
-    dwg, dwi = bsm.expert_gated_dw(x, dh, idx, g, u, interpret=spec.interpret)
-    return dxv, dwg.astype(wg.dtype), dwi.astype(wi.dtype), None, None, None, None
-
-
-_egated_core.defvjp(_egated_fwd, _egated_bwd)
+    """Expert-batched alias: x [E, M, n_in], w [E, nob, kb, bs, bs]."""
+    return junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=bias,
+                           act=act, interpret=interpret, bm=bm, bn=bn)
 
 
 def expert_gated_matmul(x, wg, wi, idx, rev_ob, rev_t, rev_cnt,
                         interpret: bool | None = None,
                         bm: int | None = None, bn: int | None = None):
-    """x [E, M, n_in] -> silu(x_e @ Wg_e) * (x_e @ Wi_e) [E, M, n_out] in
-    ONE fused kernel pass (GShard/SwiGLU expert FFN entry); the backward
-    runs through the fused two-branch expert_gated_dx/dw kernels with both
-    branch grads recomputed from the saved (g, u) residuals."""
-    interpret = _auto_interpret() if interpret is None else interpret
-    E, M0, _ = x.shape
-    _, nob, kb, bs, _ = wg.shape
-    nib = x.shape[-1] // bs
-    if bm is None or bn is None:
-        cbm, cbn = bsm.choose_expert_tiles(E, M0, nob, kb, bs, nib,
-                                           x.dtype.itemsize,
-                                           n_weight_operands=2)
-        bm = cbm if bm is None else bm
-        bn = cbn if bn is None else bn
-    if nob % bn:
-        bn = 1
-    x2, M = _pad_expert_rows(x, bm)
-    spec = _Spec(act="silu", bm=bm, bn=bn, interpret=interpret,
-                 has_bias=False)
-    h = _egated_core(spec, x2, wg.astype(x.dtype), wi.astype(x.dtype), idx,
-                     rev_ob, rev_t, rev_cnt)
-    return h[:, :M]
+    """Gated-expert alias: silu(x_e @ Wg_e) * (x_e @ Wi_e) in one pass."""
+    return junction_matmul(x, wg, idx, rev_ob, rev_t, rev_cnt, wi=wi,
+                           interpret=interpret, bm=bm, bn=bn)
 
 
 # ------------------------------------------------------------ fixed point

@@ -8,13 +8,14 @@ through on the residual path — standard GShard semantics.
 
 When the paper's pre-defined sparsity applies to the expert FFNs, one
 block pattern (same junction shape) is shared by all experts with
-per-expert weights — and the expert matmuls run through the fused
-edge-bundle Pallas engine's expert-batched kernels
-(kernels/ops.expert_gated_matmul + expert_block_sparse_matmul, grid
-(E, M/bm, nob/bn), SwiGLU gate fused into one pass) when
-``ArchConfig.engine`` resolves to "pallas".  The vmapped gather+einsum
-loop (``_expert_apply``) remains the reference path and the path the
-dry-run FLOP accounting sees (launch/dryrun.py pins engine="jnp").
+per-expert weights — and the expert matmuls run through the unified
+edge-bundle engine entry point ``kernels/ops.junction_matmul`` (the same
+custom_vjp the dense-model junctions use, here with 5-D weights
+[E, nob, kb, bs, bs] and grid (E, M/bm, nob/bn); ``wi=`` fuses the
+SwiGLU gate into one pass) when ``ArchConfig.engine`` resolves to
+"pallas".  The vmapped gather+einsum loop (``_expert_apply``) remains
+the reference path and the path the dry-run FLOP accounting sees
+(launch/dryrun.py pins engine="jnp").
 
 Aux load-balance loss follows Switch/GShard: E * sum_e f_e * p_e.
 """
@@ -117,16 +118,18 @@ def _expert_apply(w, idx, x):
 
 
 def _expert_ffn_pallas(p: Params, xd, E: int):
-    """Expert FFN stack through the expert-batched Pallas kernels:
-    xd [G,E,C,d] -> [G,E,C,d].  The gate (silu(x@wg) * (x@wi)) runs as ONE
-    fused kernel pass; wo through the plain expert-batched matmul."""
+    """Expert FFN stack through the unified junction engine:
+    xd [G,E,C,d] -> [G,E,C,d].  Both junctions go through the same
+    ``junction_matmul`` custom_vjp the dense-model layers use — the gate
+    (silu(x@wg) * (x@wi)) as ONE fused pass via ``wi=``, wo as the plain
+    E-batched configuration."""
     from repro.kernels import ops  # local import: kernels optional at runtime
     G, _, C, D = xd.shape
     xe = jnp.moveaxis(xd, 1, 0).reshape(E, G * C, D)
-    h = ops.expert_gated_matmul(
-        xe, p["wg"], p["wi"], p["idx_in"],
-        p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"])
-    ye = ops.expert_block_sparse_matmul(
+    h = ops.junction_matmul(
+        xe, p["wg"], p["idx_in"],
+        p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"], wi=p["wi"])
+    ye = ops.junction_matmul(
         h, p["wo"], p["idx_out"],
         p["rev_out_ob"], p["rev_out_t"], p["rev_out_cnt"])
     return jnp.moveaxis(ye.reshape(E, G, C, -1), 0, 1)

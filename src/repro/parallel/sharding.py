@@ -23,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.sparse_linear import MOE_PATTERN_LEAVES, PATTERN_LEAVES
 
 # linear containers whose w is [in, out]: out-dim -> "model", in-dim -> "data"
 _OUT_MODEL = {"wq", "wk", "wv", "wi", "wg", "in_proj", "wkv_b",
@@ -69,7 +70,7 @@ def _linear_spec(parent: str, leaf: str, lshape: tuple, mesh: Mesh,
     dim to replicate: sharding it would misalign the [.., H, hd] reshape and
     the partitioner would emit score-sized all-reduces per chunk."""
     nd = len(lshape)
-    if leaf in ("idx", "rev_ob", "rev_t", "rev_cnt"):
+    if leaf in PATTERN_LEAVES:
         return (None,) * nd
     if parent in _REPL:
         return ((_fit(lshape[0], "data", mesh),) + (None,) * (nd - 1)
@@ -119,10 +120,9 @@ def _leaf_spec(path: list[str], lshape: tuple, mesh: Mesh,
     # moe
     if leaf == "router":
         return (_fit(lshape[0], "data", mesh), _fit(lshape[1], "model", mesh))
-    if leaf in ("idx_in", "idx_out", "rev_in_ob", "rev_in_t", "rev_in_cnt",
-                "rev_out_ob", "rev_out_t", "rev_out_cnt"):
+    if leaf in MOE_PATTERN_LEAVES:
         # shared expert block pattern + its reverse: replicated like every
-        # other pattern leaf (scalar-prefetch operands of the expert kernels)
+        # other pattern leaf (scalar-prefetch operands of the unified kernels)
         return (None,) * nd
     if parent == "moe" or (nd in (3, 5) and leaf in ("wi", "wg", "wo")):
         if nd == 5:               # sparse experts [E, nob, kb, bs, bs]: EP only

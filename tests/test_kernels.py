@@ -256,6 +256,124 @@ def test_expert_gated_matmul_vs_vmap_oracle():
                                    rtol=2e-3, atol=2e-3, err_msg=name)
 
 
+def test_single_junction_is_e1_wrapper_no_expert_family():
+    """Acceptance: exactly one kernel family — no expert_-prefixed
+    duplicate bodies survive in the kernel module; the E-generic kernels
+    take the leading expert dim; ops exposes the one junction_matmul."""
+    from repro.kernels import block_sparse_matmul as bsm
+
+    dupes = [n for n in dir(bsm) if n.startswith("expert_")]
+    assert not dupes, f"expert_* duplicate kernel family resurfaced: {dupes}"
+    assert not hasattr(bsm, "EXPERT_TUNE_TABLE"), "second tune table resurfaced"
+    assert callable(ops.junction_matmul)
+    # the compat aliases must be thin (no separate custom_vjp cores)
+    for n in ("_bsm_core", "_ebsm_core", "_egated_core"):
+        assert not hasattr(ops, n), f"pre-unification custom_vjp {n} survives"
+
+
+def test_gated_single_junction_e1_parity():
+    """The fused SwiGLU gate through the E=1 squeeze path (a configuration
+    the pre-unification engine could not express: gated was expert-only)
+    matches the two-matmul jnp formula fwd + bwd."""
+    from repro.core import sparse_linear as sl
+
+    bs = 32
+    pat = _ragged_pattern(10 * bs, 6 * bs, 0.34, bs)
+    idx, rob, rt, rc = (jnp.asarray(pat.idx), jnp.asarray(pat.rev_ob),
+                        jnp.asarray(pat.rev_t), jnp.asarray(pat.rev_cnt))
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    M = 45
+    x = jax.random.normal(ks[0], (M, 10 * bs))
+    wg = jax.random.normal(ks[1], (pat.n_out_blocks, pat.fan_in_blocks,
+                                   bs, bs)) * 0.1
+    wi = jax.random.normal(ks[2], (pat.n_out_blocks, pat.fan_in_blocks,
+                                   bs, bs)) * 0.1
+    co = jax.random.normal(ks[3], (M, 6 * bs))
+
+    def f_pallas(x, wg, wi):
+        return jnp.sum(ops.junction_matmul(x, wg, idx, rob, rt, rc, wi=wi) * co)
+
+    def f_jnp(x, wg, wi):
+        g = sl.apply_jnp({"w": wg, "idx": idx}, x)
+        u = sl.apply_jnp({"w": wi, "idx": idx}, x)
+        return jnp.sum(jax.nn.silu(g) * u * co)
+
+    l1, g1 = jax.value_and_grad(f_pallas, (0, 1, 2))(x, wg, wi)
+    l2, g2 = jax.value_and_grad(f_jnp, (0, 1, 2))(x, wg, wi)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+    for got, want, name in zip(g1, g2, ("dx", "dwg", "dwi")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3, err_msg=name)
+
+
+def test_tune_table_key_migration():
+    """Every pre-refactor tune-table key resolves to the same tiles
+    through the merged table: PR 1's 4-key (M, nob, kb, bs) schema, the
+    transitional 5-key, and PR 2's 6-key expert schema."""
+    from repro.kernels import block_sparse_matmul as bsm
+
+    pre_refactor = {
+        # PR 1 TUNE_TABLE entries (single junction, one weight operand)
+        (12544, 4, 2, 128): (512, 4),
+        (4096, 32, 2, 128): (256, 8),
+        # PR 2 EXPERT_TUNE_TABLE entry (gated: two weight operands)
+        (4, 1280, 4, 2, 128, 2): (256, 4),
+    }
+    for key, want in pre_refactor.items():
+        canon = bsm.canonical_tune_key(key)
+        assert len(canon) == 6
+        assert bsm.TUNE_TABLE[canon] == want, (key, canon)
+    # the chooser actually hits them through its canonical lookup
+    assert bsm.choose_tiles(12544, 4, 2, 128, 8, 4) == (512, 4)
+    assert bsm.choose_tiles(4096, 32, 2, 128, 8, 4) == (256, 8)
+    assert bsm.choose_tiles(1280, 4, 2, 128, 8, 4,
+                            E=4, n_weight_operands=2) == (256, 4)
+    # 5-key transitional schema pins n_weight_operands=1
+    assert bsm.canonical_tune_key((4, 1280, 4, 2, 128)) == (4, 1280, 4, 2, 128, 1)
+    with pytest.raises(ValueError):
+        bsm.canonical_tune_key((1, 2, 3))
+
+
+def test_dx_zero_fanout_rows_exact_zero():
+    """A row block with rev_cnt == 0 (input block with zero fan-out under
+    the reverse pattern) must produce exact-zero dx rows — even when the
+    upstream gradient is non-finite (inf/nan) — rather than garbage from
+    the (0, 0) sentinel bundles the padded reverse slots point at."""
+    from repro.core.interleaver import reverse_block_pattern
+
+    bs, nib, nob, kb = 8, 6, 2, 2
+    # blocks 4 and 5 are referenced by no output block -> rev_cnt == 0
+    idx_np = np.array([[0, 1], [2, 3]], np.int32)
+    rev_ob, rev_t, rev_cnt = reverse_block_pattern(idx_np, nib)
+    assert (rev_cnt == 0).sum() == 2
+    idx, rob, rt, rc = (jnp.asarray(idx_np), jnp.asarray(rev_ob),
+                        jnp.asarray(rev_t), jnp.asarray(rev_cnt))
+    M = 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(ks[0], (M, nib * bs))
+    w = jax.random.normal(ks[1], (nob, kb, bs, bs)) * 0.1
+    b = jax.random.normal(ks[2], (nob * bs,))
+
+    for act in ("none", "sigmoid", "silu"):
+        f = lambda x: ops.junction_matmul(x, w, idx, rob, rt, rc,
+                                          bias=b, act=act)
+        _, vjp = jax.vjp(f, x)
+        # non-finite upstream grad: 0 * inf = nan would leak through a
+        # multiply-style mask — the where-mask must keep structural zeros
+        dy_bad = jnp.full((M, nob * bs), jnp.inf)
+        (dxv,) = vjp(dy_bad)
+        dead = np.asarray(dxv).reshape(M, nib, bs)[:, rev_cnt == 0, :]
+        np.testing.assert_array_equal(dead, 0.0, err_msg=f"act={act}")
+
+    # gated configuration masks the same way
+    wi = jax.random.normal(jax.random.PRNGKey(9), (nob, kb, bs, bs)) * 0.1
+    _, vjp = jax.vjp(
+        lambda x: ops.junction_matmul(x, w, idx, rob, rt, rc, wi=wi), x)
+    (dxv,) = vjp(jnp.full((M, nob * bs), jnp.nan))
+    dead = np.asarray(dxv).reshape(M, nib, bs)[:, rev_cnt == 0, :]
+    np.testing.assert_array_equal(dead, 0.0)
+
+
 def test_fused_forward_grid_bound():
     """Acceptance bound: the fused forward runs in exactly
     (M/bm) * ceil(nob/bn) grid steps — the kb reduction never appears as a
