@@ -15,6 +15,14 @@ Three junction shapes anchor the perf trajectory from this PR onward:
   in one pass) or the reference gather+einsum loop.
 
 Each row times one jit'd forward+backward (loss = sum(y)) per engine.
+
+``engine.update.*`` rows (ISSUE 4) time the full train-update cycle —
+fwd + bwd + SGD-momentum update: the ``jnp`` rows run the two-pass
+reference (materialized dw, tree-mapped update), the ``pallas`` rows the
+fused BP+UP path (update applied in the backward kernels' epilogue,
+params donated through input_output_aliasing — the dw HBM round-trip the
+fused path exists to delete).
+
 Off-TPU the Pallas rows run in interpret mode — an emulator, so their
 absolute numbers only become meaningful on real hardware; the jnp rows
 are the portable baseline.  ``BENCH_*.json`` (benchmarks/run.py --json)
@@ -32,6 +40,7 @@ from repro.core import sparse_linear as sl
 from repro.core.sparsity import SparsityConfig, make_block_pattern
 from repro.kernels import block_sparse_matmul as bsm
 from repro.models import moe as moe_mod
+from repro.optim import constant_schedule, fused_sgd
 
 SHAPES = {
     # name: (n_in, n_out, density, block, M_fast, M_full)
@@ -63,6 +72,84 @@ def _time_fwd_bwd(params, x, engine, n=3):
     for _ in range(n):
         out = step(params, x)
     jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+_UPDATE_LR, _UPDATE_BETA = 1e-3, 0.9
+
+
+def _time_junction_update(params, x, mode, n=3):
+    """One full junction train step — fwd + bwd + SGD-momentum update.
+    mode "jnp": two-pass reference (dw materialized, update tree-mapped);
+    mode "pallas": fused BP+UP (ops.junction_train_update, dw consumed by
+    the in-kernel update, params/momenta aliased in place)."""
+    from repro.kernels import ops as kops
+
+    hyp = jnp.asarray([_UPDATE_LR, _UPDATE_BETA], jnp.float32)
+    pat = (params["idx"], params["rev_ob"], params["rev_t"],
+           params["rev_cnt"])
+    mom = jnp.zeros(params["w"].shape, jnp.float32)
+    mom_b = jnp.zeros(params["b"].shape, jnp.float32)
+
+    if mode == "pallas":
+        @jax.jit
+        def step(w, b, mom, mom_b, x):
+            def loss(w, b, m, mb):
+                return jnp.sum(kops.junction_train_update(
+                    x, w, *pat, bias=b, act="sigmoid", hyp=hyp,
+                    mom=m, mom_b=mb))
+            return jax.grad(loss, (0, 1, 2, 3))(w, b, mom, mom_b)
+    else:
+        @jax.jit
+        def step(w, b, mom, mom_b, x):
+            def loss(w, b):
+                return jnp.sum(sl.apply(dict(params, w=w, b=b), x,
+                                        engine="jnp", act="sigmoid"))
+            gw, gb = jax.grad(loss, (0, 1))(w, b)
+            mv = _UPDATE_BETA * mom + gw
+            mbv = _UPDATE_BETA * mom_b + gb
+            return (w - _UPDATE_LR * mv, b - _UPDATE_LR * mbv, mv, mbv)
+
+    out = step(params["w"], params["b"], mom, mom_b, x)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = step(params["w"], params["b"], mom, mom_b, x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def _time_moe_update(params, x, mode, n=3):
+    """Full MoE layer train-update cycle through the inject/merge plumbing
+    the fused train step uses (core/sparse_linear.inject_update_ctx +
+    optim.FusedSGD.merge) vs the two-pass optimizer.update reference."""
+    cfg = _moe_cfg("pallas" if mode == "pallas" else "jnp")
+    opt = fused_sgd(constant_schedule(_UPDATE_LR), momentum=_UPDATE_BETA)
+    st = opt.init(params)
+    step0 = jnp.zeros((), jnp.int32)
+
+    def loss(p):
+        y, aux = moe_mod.moe_apply(p, x, cfg)
+        return jnp.sum(y) + aux
+
+    if mode == "pallas":
+        @jax.jit
+        def step(params, st, x):
+            aug = sl.inject_update_ctx(params, st["mom"], opt.hyp(step0))
+            grads = jax.grad(loss, allow_int=True)(aug)
+            return opt.merge(grads, st, params, step0)
+    else:
+        @jax.jit
+        def step(params, st, x):
+            grads = jax.grad(loss, allow_int=True)(params)
+            return opt.update(grads, st, params, step0)
+
+    out = step(params, st, x)
+    jax.block_until_ready(jax.tree.leaves(out))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = step(params, st, x)
+    jax.block_until_ready(jax.tree.leaves(out))
     return (time.perf_counter() - t0) / n
 
 
@@ -140,5 +227,33 @@ def bench(fast=True):
             "us_per_call": dt * 1e6,
             "derived": f"T={T} E={E} top{K} {d}->{f} d={density} bs={block} "
                        f"C={C} tiles={ebm}x{ebn} mode={mode}",
+        })
+
+    # fused BP+UP vs two-pass train-update cycle (ISSUE 4 tentpole):
+    # MNIST junction fwd+bwd+sgd-momentum ...
+    n_in, n_out, density, block, m_fast, m_full = (*SHAPES["mnist"],)
+    Mu = m_fast if fast else m_full
+    up_params = _junction_params(n_in, n_out, density, block)
+    xu = jax.random.normal(jax.random.PRNGKey(2), (Mu, n_in), jnp.float32)
+    for engine in ("jnp", "pallas"):
+        dt = _time_junction_update(up_params, xu, engine, n=3)
+        mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+        rows.append({
+            "name": f"engine.update.mnist.{engine}",
+            "us_per_call": dt * 1e6,
+            "derived": f"M={Mu} {n_in}->{n_out} d={density} bs={block} "
+                       f"sgd-momentum {'fused' if engine == 'pallas' else 'two-pass'} "
+                       f"mode={mode}",
+        })
+    # ... and the full sparse-expert MoE layer through inject/merge
+    for engine in ("jnp", "pallas"):
+        dt = _time_moe_update(moe_params, x, engine, n=3)
+        mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+        rows.append({
+            "name": f"engine.update.moe.{engine}",
+            "us_per_call": dt * 1e6,
+            "derived": f"T={T} E={E} top{K} {d}->{f} d={density} bs={block} "
+                       f"sgd-momentum {'fused' if engine == 'pallas' else 'two-pass'} "
+                       f"mode={mode}",
         })
     return rows

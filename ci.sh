@@ -1,18 +1,29 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite + the fast machine-trackable benches.
 #
-#   ./ci.sh            # tests + engine/roofline benches, BENCH_ci.json
+#   ./ci.sh                     # tests + engine/roofline benches, BENCH_ci.json
+#   ./ci.sh --fail-on-regress   # exit nonzero when engine.* rows regress
 #   BENCH_TAG=pr42 ./ci.sh
 #
 # Fails on test failures, bench harness errors (benchmarks/run.py exits
 # nonzero when any bench raises or --only names an unknown bench), or an
 # empty bench artifact (guards the silent-no-op class of regressions).
 # Additionally compares the fresh artifact against the committed
-# benchmarks/BENCH_baseline.json and WARNS (non-fatal — interpret-mode
-# timings are noisy off-TPU) when any engine.* row slowed >20%, so the
-# perf trajectory is visible in CI output.
+# benchmarks/BENCH_baseline.json: by default it WARNS (non-fatal —
+# interpret-mode timings are noisy off-TPU) when any engine.* row slows
+# past its threshold; with --fail-on-regress the comparison is fatal.
+# Per-row thresholds live in the THRESHOLDS table below (default 1.2x;
+# noisier rows get more headroom).
 set -euo pipefail
 cd "$(dirname "$0")"
+
+FAIL_ON_REGRESS=0
+for arg in "$@"; do
+  case "$arg" in
+    --fail-on-regress) FAIL_ON_REGRESS=1 ;;
+    *) echo "ci.sh: unknown argument $arg" >&2; exit 2 ;;
+  esac
+done
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
@@ -20,14 +31,25 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 TAG="${BENCH_TAG:-ci}"
-echo "== fast benches (engine incl. MoE rows, roofline) =="
+echo "== fast benches (engine incl. MoE + fused-update rows, roofline) =="
 python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json"
 
-python - "BENCH_${TAG}.json" benchmarks/BENCH_baseline.json <<'PY'
+python - "BENCH_${TAG}.json" benchmarks/BENCH_baseline.json "$FAIL_ON_REGRESS" <<'PY'
 import sys
 from benchmarks.run import load_artifact
 
-path, base_path = sys.argv[1], sys.argv[2]
+# Per-row slowdown thresholds (new/old ratio).  The single-call-dominated
+# MoE rows jitter more off-TPU than the plain junction rows; fused-update
+# rows time a whole train step and inherit that noise.
+DEFAULT_THRESHOLD = 1.2
+THRESHOLDS = {
+    "engine.moe.jnp": 1.35,
+    "engine.moe.pallas": 1.35,
+    "engine.update.moe.jnp": 1.4,
+    "engine.update.moe.pallas": 1.4,
+}
+
+path, base_path, fail_on_regress = sys.argv[1], sys.argv[2], sys.argv[3] == "1"
 meta, results = load_artifact(path)
 if not results:
     sys.exit(f"[ci] empty bench artifact {path} — benches ran nothing")
@@ -46,14 +68,19 @@ for name in sorted(base):
     if not name.startswith("engine.") or name not in results:
         continue
     new, old = results[name], base[name]
+    thresh = THRESHOLDS.get(name, DEFAULT_THRESHOLD)
     ratio = new / old if old else float("inf")
-    flag = "  <-- WARN >20% slower" if ratio > 1.2 else ""
+    flag = f"  <-- {'FAIL' if fail_on_regress else 'WARN'} >{thresh:.2f}x" \
+        if ratio > thresh else ""
     print(f"[ci]   {name}: {old:.0f} -> {new:.0f} us ({ratio:.2f}x){flag}")
-    if ratio > 1.2:
+    if ratio > thresh:
         slow.append(name)
 if slow:
-    print(f"[ci] WARNING: {len(slow)} engine.* row(s) >20% slower than "
-          f"baseline ({', '.join(slow)}) — non-fatal, investigate before "
+    msg = (f"{len(slow)} engine.* row(s) slower than their baseline "
+           f"threshold ({', '.join(slow)})")
+    if fail_on_regress:
+        sys.exit(f"[ci] FAIL: {msg}")
+    print(f"[ci] WARNING: {msg} — non-fatal, investigate before "
           f"refreshing benchmarks/BENCH_baseline.json")
 PY
 

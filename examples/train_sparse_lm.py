@@ -54,7 +54,7 @@ def main():
 
     opt = adam(cosine_schedule(3e-4, warmup=20, total=args.steps))
     opt_state = opt.init(params)
-    ts = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    ts = make_train_step(cfg, opt)   # jitted with params/opt donated
     pipe = LMTokenPipeline(cfg, args.batch, args.seq)
     t0 = time.time()
     res = run(TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt,

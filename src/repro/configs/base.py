@@ -103,6 +103,14 @@ class ArchConfig:
     #   "auto"   — pallas on TPU backends, jnp elsewhere (default)
     # resolved once at step-build time (train/steps.py, serve/engine.py)
     engine: str = "auto"
+    # fused BP+UP: apply the SGD(+momentum) update to pre-defined-sparse
+    # junction weights INSIDE the backward kernels (the paper's concurrent
+    # update stage) so weight gradients never materialize in HBM.  Takes
+    # effect only when train/steps.py resolves the step as eligible
+    # (pallas engine, optim.fused_sgd without grad clipping, single
+    # microbatch, param_dtype == dtype); otherwise — and always for the
+    # jnp engine and launch/dryrun.py — the two-pass reference path runs.
+    fused_update: bool = False
 
     # ---------------------------------------------------------------- helpers
     @property

@@ -46,6 +46,55 @@ MOE_PATTERN_LEAVES = ("idx_in", "idx_out",
                       "rev_in_ob", "rev_in_t", "rev_in_cnt",
                       "rev_out_ob", "rev_out_t", "rev_out_cnt")
 
+# Fused BP+UP context leaves (train/steps.py injects them into every
+# pattern-bearing junction dict before differentiating; they exist only
+# inside the traced fused train step, never in the stored params tree):
+# UPDATE_HYP_LEAF carries the [lr, momentum] pair (broadcast over any layer
+# stacking dims so lax.scan slices it per layer), FUSED_MOM maps each
+# trainable junction weight leaf to its fp32 momentum accumulator's
+# injected name.  The custom_vjp returns the UPDATED params / momenta as
+# these leaves' cotangents — the "grads" tree of a fused step carries new
+# parameters, not gradients, at junction leaves.
+UPDATE_HYP_LEAF = "upd_hyp"
+FUSED_MOM = {"w": "mom_w", "b": "mom_b",
+             "wi": "mom_wi", "wg": "mom_wg", "wo": "mom_wo"}
+
+
+def is_junction(p) -> bool:
+    """A pattern-bearing parameter dict: a single sparse junction ("idx")
+    or a MoE expert-FFN pair sharing patterns ("idx_in")."""
+    return isinstance(p, dict) and ("idx" in p or "idx_in" in p)
+
+
+def inject_update_ctx(params, mom, hyp):
+    """Copy of ``params`` with the fused-update context added to every
+    junction dict: ``upd_hyp`` (broadcast to the junction's stacking dims,
+    derived from its idx leaf) plus the junction's momentum accumulators
+    from the mirrored ``mom`` tree (None → plain SGD, no mom leaves).
+    Dense leaves ride through untouched — the optimizer tree-maps them."""
+    def rec(p, m):
+        if isinstance(p, dict):
+            out = {}
+            for k, v in p.items():
+                if isinstance(v, (dict, list, tuple)):
+                    out[k] = rec(v, m[k] if m is not None else None)
+                else:
+                    out[k] = v
+            if is_junction(p):
+                idx = p["idx"] if "idx" in p else p["idx_in"]
+                stack = idx.shape[:-2]   # leading layer-scan dims
+                out[UPDATE_HYP_LEAF] = jnp.broadcast_to(hyp, stack + (2,))
+                if m is not None:
+                    for k, mk in FUSED_MOM.items():
+                        if k in p and not isinstance(p[k], dict):
+                            out[mk] = m[k]
+            return out
+        if isinstance(p, (list, tuple)):
+            return type(p)(rec(v, m[i] if m is not None else None)
+                           for i, v in enumerate(p))
+        return p
+    return rec(params, mom)
+
 
 def is_sparse(params: Params) -> bool:
     return "idx" in params
@@ -145,11 +194,22 @@ def _with_act(y: jax.Array, act: str) -> jax.Array:
 
 def apply(params: Params, x: jax.Array, *, engine: str = "auto",
           act: str = "none") -> jax.Array:
-    """y = act(x @ W + b) through the configured execution engine."""
+    """y = act(x @ W + b) through the configured execution engine.
+
+    A junction dict carrying the injected fused-update context
+    (``UPDATE_HYP_LEAF``; only ever present inside a fused train step's
+    trace) routes through ``junction_train_update``: forward identical,
+    backward returns the updated params as the weight cotangents."""
     if not is_sparse(params):
         return _with_act(apply_dense(params, x), act)
     if resolve_engine(engine) == "pallas":
         from repro.kernels import ops  # local import: kernels optional at runtime
+        if UPDATE_HYP_LEAF in params:
+            return ops.junction_train_update(
+                x, params["w"], params["idx"], params["rev_ob"],
+                params["rev_t"], params["rev_cnt"], bias=params.get("b"),
+                act=act, hyp=params[UPDATE_HYP_LEAF],
+                mom=params.get("mom_w"), mom_b=params.get("mom_b"))
         return ops.junction_matmul(
             x, params["w"], params["idx"], params["rev_ob"], params["rev_t"],
             params["rev_cnt"], bias=params.get("b"), act=act)

@@ -23,23 +23,51 @@ ONE block pattern that rides once in scalar prefetch — the paper's
 * **dx** — grid ``(E, M/bm, nib)``: the reverse (fan-out) pattern
   reduction over ``fb`` runs in-body.  The reverse weight bundles are
   **DMA'd in-kernel**: the forward-layout weights stay in HBM
-  (``memory_space=ANY``) and each ``w[e, rev_ob[i,f], rev_t[i,f]]`` tile
-  is copied HBM→VMEM through a double-buffered ``make_async_copy`` whose
+  (``memory_space=ANY``, viewed flat as ``[E, nob*kb, bs, bs]``) and the
+  tiles at linear slot ``rev_ob[i,f]*kb + rev_t[i,f]`` are copied
+  HBM→VMEM through double-buffered ``make_async_copy`` descriptors whose
   offsets come from the scalar-prefetched reverse pattern — no XLA
   ``w[rev_ob, rev_t]`` pre-gather, no w-sized HBM round-trip per
-  backward step.  The bundle is consumed un-transposed (the dot
-  contracts both operands on their last dim).  Padded reverse slots
-  (``f >= rev_cnt[i]``, including whole input blocks with zero fan-out)
-  carry in-bounds ``(0, 0)`` sentinels and their contribution is
-  ``where``-masked — exact zeros even against non-finite upstream
-  gradients.  The activation gradient is recomputed in the prologue from
-  the saved residual (output y, or pre-activation s for silu/gelu), so
-  the elementwise grad tensor ``dz`` never materializes in HBM.
+  backward step.  Reverse slots are consumed in **pairs**: when two
+  consecutive slots are contiguous in the flat slot layout (``s1 ==
+  s0 + 1`` — e.g. the last fan-in slot of one output block followed by
+  the first of the next), ONE two-tile descriptor fetches both, halving
+  descriptor overhead for high-fan-out patterns; non-contiguous pairs
+  fall back to two single-tile descriptors, so scattered patterns pay
+  exactly the pre-coalescing descriptor count.  The bundle is consumed
+  un-transposed (the dot contracts both operands on their last dim).
+  Padded reverse slots (``f >= rev_cnt[i]``, including whole input
+  blocks with zero fan-out) carry in-bounds ``(0, 0)`` sentinels and
+  their contribution is ``where``-masked — exact zeros even against
+  non-finite upstream gradients.  The activation gradient is recomputed
+  in the prologue from the saved residual (output y, or pre-activation s
+  for silu/gelu), so the elementwise grad tensor ``dz`` never
+  materializes in HBM.
 * **dw** — grid ``(E, nob, M/bm)`` with the M reduction innermost into
   fp32 VMEM scratch, written once on the last step.  The ``kb`` gathered
   input blocks arrive through scalar-prefetch-driven BlockSpec
   index_maps (the interleaver as DMA descriptor), and the bias gradient
   accumulates in the same pass.
+* **update_dw / update_gated_dw** — the fused **BP+UP** variants (the
+  paper's concurrent backprop + update pipeline): same grid and the same
+  M-innermost VMEM-scratch gradient reduction as ``dw``/``gated_dw``,
+  but instead of flushing the weight gradient to HBM the epilogue
+  applies the SGD(+momentum) update **in-kernel** on the last M step:
+
+      mom' = hyp[1] * mom + dw_tile        (fp32, when momentum buffers
+                                            ride along)
+      w'   = (w - hyp[0] * mom').astype(w.dtype)
+
+  ``hyp = [lr, momentum]`` streams through scalar prefetch; ``w`` (and
+  the fp32 ``mom`` accumulators, and ``b``/``mom_b`` for biased layers)
+  come in as per-(e, ob) resident tiles and leave as outputs declared
+  with ``input_output_aliases``, so XLA rewrites the parameter buffers
+  in place — neither ``dw`` nor a second copy of ``w`` ever touches HBM.
+  The aliasing contract: every parameter operand maps to the output at
+  the same relative position, the input/output BlockSpecs are identical,
+  and each (e, ob) tile is read and written exactly once (the M loop is
+  innermost), so no grid step can observe a partially-updated tile.
+  Momentum accumulators are fp32 even for bf16 params.
 * **gated_{fwd,dx,dw}** — the GShard/SwiGLU gate
   ``silu(x @ Wg) * (x @ Wi)`` fused into single passes: both fan-in
   reductions accumulate side by side in VMEM scratch in the forward, and
@@ -60,6 +88,14 @@ where ``E`` is the expert count (1 for single junctions), ``M`` the
 output-block/fan-in/block-size shape, and ``n_weight_operands`` the
 number of weight tensors streamed per step (2 for the gated kernel —
 its entries are tuned for double the weight-bundle residency).
+``n_weight_operands`` counts *forward* weight streams only: the fused
+update kernels keep their extra parameter tiles (w + fp32 momentum, and
+their aliased outputs) resident per (e, ob) rather than streaming them
+per step, and they reuse the forward's tune entry for the row tile via
+the ``bwd_bm`` clamp — deliberately the SAME default ``bm`` as the
+plain ``dw`` kernels so the fp32 gradient accumulation order matches
+the two-pass reference (updated params agree to fp32 round-off; only
+XLA's fma fusion of the epilogue differs between the two programs).
 
 To add a measured entry: run ``benchmarks/run.py --json`` on real
 hardware, pick the winning tiles for an ``engine.*`` row, and add the
@@ -254,7 +290,7 @@ def fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
         bn = 1
     assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
 
-    def kernel(idx_ref, x_ref, w_ref, b_ref, *rest):
+    def fwd_kernel(idx_ref, x_ref, w_ref, b_ref, *rest):
         acc_ref = rest[-1]
         o_ref = rest[0]
         ob0 = pl.program_id(2) * bn
@@ -279,7 +315,7 @@ def fwd(x, w, idx, bias, *, act: str = "none", bm: int | None = None,
                                       lambda e, m, o, idx: (e, m, o)))
 
     outs = pl.pallas_call(
-        kernel,
+        fwd_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(E, M // bm, nob // bn),
@@ -318,7 +354,7 @@ def gated_fwd(x, wg, wi, idx, *, bm: int | None = None,
         bn = 1
     assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
 
-    def kernel(idx_ref, x_ref, wg_ref, wi_ref, *rest):
+    def gated_fwd_kernel(idx_ref, x_ref, wg_ref, wi_ref, *rest):
         accg_ref, accu_ref = rest[-2], rest[-1]
         h_ref = rest[0]
         ob0 = pl.program_id(2) * bn
@@ -350,7 +386,7 @@ def gated_fwd(x, wg, wi, idx, *, bm: int | None = None,
                                           lambda e, m, o, idx: (e, m, o)))
 
     outs = pl.pallas_call(
-        kernel,
+        gated_fwd_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(E, M // bm, nob // bn),
@@ -380,6 +416,41 @@ def _rev_dot(dz, wb):
                                preferred_element_type=jnp.float32)
 
 
+def _pair_copies(w_hbm, wbuf, sems, e, s0, s1, buf):
+    """The (descriptor, condition) list fetching the reverse slot pair
+    (s0, s1) of the flat [E, nob*kb, bs, bs] weight view into buffer line
+    ``wbuf[buf]``: ONE two-tile descriptor when the slots are contiguous
+    in the flat layout, else one single-tile descriptor per slot.  s1 is
+    None for the trailing half-pair of an odd fan-out.  Called with
+    identical arguments from the start and the wait sides so the
+    conditional descriptors always match their semaphores."""
+    if s1 is None:
+        return [(pltpu.make_async_copy(w_hbm.at[e, pl.ds(s0, 1)],
+                                       wbuf.at[buf, pl.ds(0, 1)],
+                                       sems.at[buf, 0]), None)]
+    contig = s1 == s0 + 1
+    apart = jnp.logical_not(contig)
+    return [
+        (pltpu.make_async_copy(w_hbm.at[e, pl.ds(s0, 2)], wbuf.at[buf],
+                               sems.at[buf, 0]), contig),
+        (pltpu.make_async_copy(w_hbm.at[e, pl.ds(s0, 1)],
+                               wbuf.at[buf, pl.ds(0, 1)],
+                               sems.at[buf, 0]), apart),
+        (pltpu.make_async_copy(w_hbm.at[e, pl.ds(s1, 1)],
+                               wbuf.at[buf, pl.ds(1, 1)],
+                               sems.at[buf, 1]), apart),
+    ]
+
+
+def _run_copies(copies, method: str):
+    for copy, cond in copies:
+        fn = getattr(copy, method)
+        if cond is None:
+            fn()
+        else:
+            pl.when(cond)(fn)
+
+
 def dx(dy, w, rev_ob, rev_t, rev_cnt, res, *, act: str = "none",
        bm: int | None = None, interpret: bool = False):
     """dy [E, M, nob*bs] -> dx [E, M, nib*bs] via the shared reverse
@@ -387,10 +458,14 @@ def dx(dy, w, rev_ob, rev_t, rev_cnt, res, *, act: str = "none",
     [E, nob, kb, bs, bs].
 
     The reverse weight bundles are DMA'd in-kernel: w stays in HBM
-    (memory_space=ANY) and each w[e, rev_ob[i,f], rev_t[i,f]] tile is
-    double-buffered HBM→VMEM with make_async_copy, offsets from the
-    scalar-prefetched reverse pattern — the XLA w[rev_ob, rev_t]
-    pre-gather (a w-sized round-trip per backward call) is gone.  Padded
+    (memory_space=ANY, viewed flat over the (nob, kb) slot dims) and the
+    tiles at linear slot rev_ob[i,f]*kb + rev_t[i,f] are double-buffered
+    HBM→VMEM with make_async_copy, offsets from the scalar-prefetched
+    reverse pattern — the XLA w[rev_ob, rev_t] pre-gather (a w-sized
+    round-trip per backward call) is gone.  Slots are fetched in PAIRS:
+    contiguous runs in the flat slot layout coalesce into one two-tile
+    descriptor (halved descriptor overhead for high-fan-out patterns),
+    scattered pairs fall back to two single-tile descriptors.  Padded
     slots (f >= rev_cnt[i], (0,0) sentinels) prefetch an in-bounds bundle
     whose contribution is where-masked, so zero-fan-out input blocks
     yield exact-zero dx rows even for non-finite dy.  The activation
@@ -402,8 +477,10 @@ def dx(dy, w, rev_ob, rev_t, rev_cnt, res, *, act: str = "none",
     if bm is None:
         bm = bwd_bm(M, nob * (2 if has_res else 1), bs, dy.dtype.itemsize)
     assert M % bm == 0
+    npair = (fb + 1) // 2
+    w_flat = w.reshape(E, nob * kb, bs, bs)
 
-    def kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, *refs):
+    def dx_kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, *refs):
         if has_res:
             dy_ref, res_ref, w_hbm, o_ref, wbuf, sems = refs
         else:
@@ -413,26 +490,33 @@ def dx(dy, w, rev_ob, rev_t, rev_cnt, res, *, act: str = "none",
         i = pl.program_id(2)
         cnt = rev_cnt_ref[i]
 
-        def bundle(slot, f):
-            return pltpu.make_async_copy(
-                w_hbm.at[e, rev_ob_ref[i, f], rev_t_ref[i, f]],
-                wbuf.at[slot], sems.at[slot])
+        def slot(f):
+            return rev_ob_ref[i, f] * kb + rev_t_ref[i, f]
 
-        bundle(0, 0).start()
+        def copies(buf, p):
+            f0 = 2 * p
+            s1 = slot(f0 + 1) if f0 + 1 < fb else None
+            return _pair_copies(w_hbm, wbuf, sems, e, slot(f0), s1, buf)
+
+        _run_copies(copies(0, 0), "start")
         acc = jnp.zeros((bm, bs), jnp.float32)
-        for f in range(fb):
-            if f + 1 < fb:
-                bundle((f + 1) % 2, f + 1).start()
-            bundle(f % 2, f).wait()
-            ob = rev_ob_ref[i, f]
-            dyb = dy_ref[0, :, pl.ds(ob * bs, bs)]
-            if has_res:
-                gr = act_bwd(
-                    res_ref[0, :, pl.ds(ob * bs, bs)].astype(jnp.float32), act)
-                dz = (dyb.astype(jnp.float32) * gr).astype(dyb.dtype)
-            else:
-                dz = dyb
-            acc = acc + jnp.where(f < cnt, _rev_dot(dz, wbuf[f % 2]), 0.0)
+        for p in range(npair):
+            if p + 1 < npair:
+                _run_copies(copies((p + 1) % 2, p + 1), "start")
+            _run_copies(copies(p % 2, p), "wait")
+            for j in range(min(2, fb - 2 * p)):
+                f = 2 * p + j
+                ob = rev_ob_ref[i, f]
+                dyb = dy_ref[0, :, pl.ds(ob * bs, bs)]
+                if has_res:
+                    gr = act_bwd(
+                        res_ref[0, :, pl.ds(ob * bs, bs)].astype(jnp.float32),
+                        act)
+                    dz = (dyb.astype(jnp.float32) * gr).astype(dyb.dtype)
+                else:
+                    dz = dyb
+                acc = acc + jnp.where(f < cnt,
+                                      _rev_dot(dz, wbuf[p % 2, j]), 0.0)
         o_ref[0] = acc.astype(o_ref.dtype)
 
     in_specs = [pl.BlockSpec((1, bm, nob * bs),
@@ -443,18 +527,18 @@ def dx(dy, w, rev_ob, rev_t, rev_cnt, res, *, act: str = "none",
                                      lambda e, m, i, *_: (e, m, 0)))
         inputs.append(res)
     in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
-    inputs.append(w)
+    inputs.append(w_flat)
 
     return pl.pallas_call(
-        kernel,
+        dx_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(E, M // bm, nib),
             in_specs=in_specs,
             out_specs=pl.BlockSpec((1, bm, bs),
                                    lambda e, m, i, *_: (e, m, i)),
-            scratch_shapes=[pltpu.VMEM((2, bs, bs), w.dtype),
-                            pltpu.SemaphoreType.DMA((2,))],
+            scratch_shapes=[pltpu.VMEM((2, 2, bs, bs), w.dtype),
+                            pltpu.SemaphoreType.DMA((2, 2))],
         ),
         out_shape=jax.ShapeDtypeStruct((E, M, nib * bs), dy.dtype),
         interpret=interpret,
@@ -467,64 +551,70 @@ def gated_dx(dh, wg, wi, rev_ob, rev_t, rev_cnt, g, u, *,
     (dz_g = dh * u * silu'(g), dz_u = dh * silu(g)) are recomputed per dy
     block from the saved residuals and reduced against their reverse
     bundles in the same fb loop — one pass over dh/g/u per input block,
-    with BOTH weight streams double-buffered HBM→VMEM in-kernel."""
+    with BOTH weight streams double-buffered HBM→VMEM in-kernel and the
+    same pairwise contiguous-run descriptor coalescing as ``dx``."""
     E, M, _ = dh.shape
     _, nob, kb, bs, _ = wg.shape
     nib, fb = rev_ob.shape
     if bm is None:
         bm = bwd_bm(M, 3 * nob, bs, dh.dtype.itemsize)
     assert M % bm == 0
+    npair = (fb + 1) // 2
+    wg_flat = wg.reshape(E, nob * kb, bs, bs)
+    wi_flat = wi.reshape(E, nob * kb, bs, bs)
 
-    def kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, dh_ref, g_ref, u_ref,
-               wg_hbm, wi_hbm, o_ref, wgbuf, wibuf, sems):
+    def gated_dx_kernel(rev_ob_ref, rev_t_ref, rev_cnt_ref, dh_ref, g_ref,
+                        u_ref, wg_hbm, wi_hbm, o_ref, wgbuf, wibuf, sems):
         e = pl.program_id(0)
         i = pl.program_id(2)
         cnt = rev_cnt_ref[i]
 
-        def bundles(slot, f):
-            ob = rev_ob_ref[i, f]
-            t = rev_t_ref[i, f]
-            return (pltpu.make_async_copy(wg_hbm.at[e, ob, t],
-                                          wgbuf.at[slot], sems.at[slot, 0]),
-                    pltpu.make_async_copy(wi_hbm.at[e, ob, t],
-                                          wibuf.at[slot], sems.at[slot, 1]))
+        def slot(f):
+            return rev_ob_ref[i, f] * kb + rev_t_ref[i, f]
 
-        for c in bundles(0, 0):
-            c.start()
+        def copies(buf, p):
+            f0 = 2 * p
+            s0 = slot(f0)
+            s1 = slot(f0 + 1) if f0 + 1 < fb else None
+            return (_pair_copies(wg_hbm, wgbuf, sems.at[0], e, s0, s1, buf)
+                    + _pair_copies(wi_hbm, wibuf, sems.at[1], e, s0, s1, buf))
+
+        _run_copies(copies(0, 0), "start")
         acc = jnp.zeros((bm, bs), jnp.float32)
-        for f in range(fb):
-            if f + 1 < fb:
-                for c in bundles((f + 1) % 2, f + 1):
-                    c.start()
-            for c in bundles(f % 2, f):
-                c.wait()
-            cols = pl.ds(rev_ob_ref[i, f] * bs, bs)
-            dhb = dh_ref[0, :, cols].astype(jnp.float32)
-            gb = g_ref[0, :, cols].astype(jnp.float32)
-            ub = u_ref[0, :, cols].astype(jnp.float32)
-            dzg = (dhb * ub * act_bwd(gb, "silu")).astype(dh_ref.dtype)
-            dzu = (dhb * act_fwd(gb, "silu")).astype(dh_ref.dtype)
-            part = _rev_dot(dzg, wgbuf[f % 2]) + _rev_dot(dzu, wibuf[f % 2])
-            acc = acc + jnp.where(f < cnt, part, 0.0)
+        for p in range(npair):
+            if p + 1 < npair:
+                _run_copies(copies((p + 1) % 2, p + 1), "start")
+            _run_copies(copies(p % 2, p), "wait")
+            for j in range(min(2, fb - 2 * p)):
+                f = 2 * p + j
+                cols = pl.ds(rev_ob_ref[i, f] * bs, bs)
+                dhb = dh_ref[0, :, cols].astype(jnp.float32)
+                gb = g_ref[0, :, cols].astype(jnp.float32)
+                ub = u_ref[0, :, cols].astype(jnp.float32)
+                dzg = (dhb * ub * act_bwd(gb, "silu")).astype(dh_ref.dtype)
+                dzu = (dhb * act_fwd(gb, "silu")).astype(dh_ref.dtype)
+                part = (_rev_dot(dzg, wgbuf[p % 2, j])
+                        + _rev_dot(dzu, wibuf[p % 2, j]))
+                acc = acc + jnp.where(f < cnt, part, 0.0)
         o_ref[0] = acc.astype(o_ref.dtype)
 
     row = pl.BlockSpec((1, bm, nob * bs), lambda e, m, i, *_: (e, m, 0))
     hbm = pl.BlockSpec(memory_space=pltpu.ANY)
     return pl.pallas_call(
-        kernel,
+        gated_dx_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(E, M // bm, nib),
             in_specs=[row, row, row, hbm, hbm],
             out_specs=pl.BlockSpec((1, bm, bs),
                                    lambda e, m, i, *_: (e, m, i)),
-            scratch_shapes=[pltpu.VMEM((2, bs, bs), wg.dtype),
-                            pltpu.VMEM((2, bs, bs), wi.dtype),
-                            pltpu.SemaphoreType.DMA((2, 2))],
+            scratch_shapes=[pltpu.VMEM((2, 2, bs, bs), wg.dtype),
+                            pltpu.VMEM((2, 2, bs, bs), wi.dtype),
+                            pltpu.SemaphoreType.DMA((2, 2, 2))],
         ),
         out_shape=jax.ShapeDtypeStruct((E, M, nib * bs), dh.dtype),
         interpret=interpret,
-    )(rev_ob, rev_t, rev_cnt, dh, g, u, wg, wi)
+    )(rev_ob, rev_t, rev_cnt, dh, g, u, wg_flat, wi_flat)
 
 
 # ------------------------------------------------------------------ dw (+db)
@@ -545,7 +635,7 @@ def dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
     assert M % bm == 0
     nm = M // bm
 
-    def kernel(idx_ref, *refs):
+    def dw_kernel(idx_ref, *refs):
         n_in = (2 if has_res else 1) + kb
         dy_ref = refs[0]
         res_ref = refs[1] if has_res else None
@@ -603,7 +693,7 @@ def dw(x, dy, idx, res, *, act: str = "none", with_bias: bool = True,
         scratch.append(pltpu.VMEM((1, bs), jnp.float32))
 
     outs = pl.pallas_call(
-        kernel,
+        dw_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(E, nob, nm),
@@ -633,7 +723,7 @@ def gated_dw(x, dh, idx, g, u, *, bm: int | None = None,
     assert M % bm == 0
     nm = M // bm
 
-    def kernel(idx_ref, dh_ref, g_ref, u_ref, *refs):
+    def gated_dw_kernel(idx_ref, dh_ref, g_ref, u_ref, *refs):
         x_refs = refs[:kb]
         dwg_ref, dwi_ref, accg_ref, accu_ref = refs[kb:]
         m = pl.program_id(2)
@@ -670,7 +760,7 @@ def gated_dw(x, dh, idx, g, u, *, bm: int | None = None,
 
     wout = pl.BlockSpec((1, 1, kb, bs, bs), lambda e, o, m, idx: (e, o, 0, 0, 0))
     outs = pl.pallas_call(
-        kernel,
+        gated_dw_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(E, nob, nm),
@@ -684,3 +774,260 @@ def gated_dw(x, dh, idx, g, u, *, bm: int | None = None,
         interpret=interpret,
     )(idx, *inputs)
     return outs[0], outs[1]
+
+
+# --------------------------------------------------- fused BP+UP (update_dw)
+N_SCALAR_PREFETCH_UPDATE = 2    # (idx, hyp) — alias indices count these
+
+
+def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
+              with_bias: bool = True, bm: int | None = None,
+              interpret: bool = False):
+    """The fused UP stage: the ``dw`` gradient reduction with the SGD
+    (+momentum) update applied in the flush epilogue — returns
+    ``(new_w, new_b, new_mom, new_mom_b)`` (None where the operand is
+    absent) instead of ``(dw, db)``, with every parameter operand aliased
+    to its output (``input_output_aliases``), so the weight gradient
+    never leaves VMEM scratch and the parameters are rewritten in place.
+
+    hyp is the scalar-prefetched ``[lr, momentum]`` f32 pair; mom/mom_b
+    are fp32 accumulators (None → plain SGD).  Same grid, BlockSpecs and
+    default row tile as ``dw``, so the fp32 accumulation order matches
+    the two-pass path exactly (parity to fp32 round-off)."""
+    E, M, _ = x.shape
+    nob, kb = idx.shape
+    bs = dy.shape[2] // nob
+    has_res = act != "none"
+    has_mom = mom is not None
+    if bm is None:
+        bm = bwd_bm(M, kb + 3, bs, x.dtype.itemsize)
+    assert M % bm == 0
+    nm = M // bm
+
+    def fused_update_dw(idx_ref, hyp_ref, *refs):
+        n_lead = 2 if has_res else 1
+        dy_ref = refs[0]
+        res_ref = refs[1] if has_res else None
+        x_refs = refs[n_lead:n_lead + kb]
+        pos = n_lead + kb
+        w_ref = refs[pos]
+        pos += 1
+        mom_ref = refs[pos] if has_mom else None
+        pos += int(has_mom)
+        b_ref = refs[pos] if with_bias else None
+        pos += int(with_bias)
+        mom_b_ref = refs[pos] if (has_mom and with_bias) else None
+        pos += int(has_mom and with_bias)
+        outs = list(refs[pos:])
+        new_w_ref = outs.pop(0)
+        new_mom_ref = outs.pop(0) if has_mom else None
+        new_b_ref = outs.pop(0) if with_bias else None
+        new_mom_b_ref = outs.pop(0) if (has_mom and with_bias) else None
+        if with_bias:
+            accw_ref, accb_ref = outs
+        else:
+            (accw_ref,) = outs
+        m = pl.program_id(2)
+
+        @pl.when(m == 0)
+        def _zero():
+            accw_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+            if with_bias:
+                accb_ref[...] = jnp.zeros((1, bs), jnp.float32)
+
+        if has_res:
+            grad = act_bwd(res_ref[0].astype(jnp.float32), act)
+            dzf = dy_ref[0].astype(jnp.float32) * grad
+            dz = dzf.astype(dy_ref.dtype)
+        else:
+            dzf = None
+            dz = dy_ref[0]
+        for k in range(kb):
+            accw_ref[k] = accw_ref[k] + jnp.dot(
+                x_refs[k][0].T, dz, preferred_element_type=jnp.float32)
+        if with_bias:
+            s = dzf if dzf is not None else dy_ref[0].astype(jnp.float32)
+            accb_ref[...] = accb_ref[...] + jnp.sum(s, axis=0, keepdims=True)
+
+        @pl.when(m == nm - 1)
+        def _apply():
+            lr = hyp_ref[0]
+            mv = accw_ref[...]
+            if has_mom:
+                mv = hyp_ref[1] * mom_ref[0, 0] + mv
+                new_mom_ref[0, 0] = mv
+            new_w_ref[0, 0] = (w_ref[0, 0].astype(jnp.float32)
+                               - lr * mv).astype(new_w_ref.dtype)
+            if with_bias:
+                mbv = accb_ref[...]
+                if has_mom:
+                    mbv = hyp_ref[1] * mom_b_ref[...] + mbv
+                    new_mom_b_ref[...] = mbv
+                new_b_ref[...] = (b_ref[...].astype(jnp.float32)
+                                  - lr * mbv).astype(new_b_ref.dtype)
+
+    in_specs = [pl.BlockSpec((1, bm, bs), lambda e, o, m, *_: (e, m, o))]
+    inputs = [dy]
+    if has_res:
+        in_specs.append(pl.BlockSpec((1, bm, bs),
+                                     lambda e, o, m, *_: (e, m, o)))
+        inputs.append(res)
+    for k in range(kb):
+        in_specs.append(pl.BlockSpec(
+            (1, bm, bs), lambda e, o, m, idx, hyp, k=k: (e, m, idx[o, k])))
+        inputs.append(x)
+
+    wspec = pl.BlockSpec((1, 1, kb, bs, bs), lambda e, o, m, *_: (e, o, 0, 0, 0))
+    bspec = pl.BlockSpec((1, bs), lambda e, o, m, *_: (e, o))
+    aliases: dict[int, int] = {}
+    out_specs, out_shape = [], []
+
+    def alias_io(arr, spec):
+        """Parameter operand riding in AND out through the same BlockSpec —
+        the in-place update contract."""
+        aliases[N_SCALAR_PREFETCH_UPDATE + len(inputs)] = len(out_shape)
+        in_specs.append(spec)
+        inputs.append(arr)
+        out_specs.append(spec)
+        out_shape.append(jax.ShapeDtypeStruct(arr.shape, arr.dtype))
+
+    alias_io(w, wspec)
+    if has_mom:
+        alias_io(mom, wspec)
+    if with_bias:
+        alias_io(b, bspec)
+        if has_mom:
+            alias_io(mom_b, bspec)
+
+    scratch = [pltpu.VMEM((kb, bs, bs), jnp.float32)]
+    if with_bias:
+        scratch.append(pltpu.VMEM((1, bs), jnp.float32))
+
+    outs = pl.pallas_call(
+        fused_update_dw,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=N_SCALAR_PREFETCH_UPDATE,
+            grid=(E, nob, nm),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(idx, hyp, *inputs)
+    outs = list(outs)
+    new_w = outs.pop(0)
+    new_mom = outs.pop(0) if has_mom else None
+    new_b = outs.pop(0) if with_bias else None
+    new_mom_b = outs.pop(0) if (has_mom and with_bias) else None
+    return new_w, new_b, new_mom, new_mom_b
+
+
+def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
+                    bm: int | None = None, interpret: bool = False):
+    """Fused BP+UP for the gated junction: both branch gradients reduce
+    into VMEM scratch exactly as in ``gated_dw`` and the flush epilogue
+    applies the SGD(+momentum) update to BOTH weight streams in place —
+    returns ``(new_wg, new_wi, new_mg, new_mi)`` (momenta None for plain
+    SGD), all aliased to their inputs."""
+    E, M, _ = x.shape
+    nob, kb = idx.shape
+    bs = dh.shape[2] // nob
+    has_mom = mg is not None
+    if bm is None:
+        bm = bwd_bm(M, kb + 5, bs, x.dtype.itemsize)
+    assert M % bm == 0
+    nm = M // bm
+
+    def fused_update_gated_dw(idx_ref, hyp_ref, dh_ref, g_ref, u_ref, *refs):
+        x_refs = refs[:kb]
+        pos = kb
+        wg_ref, wi_ref = refs[pos], refs[pos + 1]
+        pos += 2
+        if has_mom:
+            mg_ref, mi_ref = refs[pos], refs[pos + 1]
+            pos += 2
+        outs = list(refs[pos:])
+        new_wg_ref = outs.pop(0)
+        new_wi_ref = outs.pop(0)
+        if has_mom:
+            new_mg_ref = outs.pop(0)
+            new_mi_ref = outs.pop(0)
+        accg_ref, accu_ref = outs
+        m = pl.program_id(2)
+
+        @pl.when(m == 0)
+        def _zero():
+            accg_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+            accu_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+
+        dhb = dh_ref[0].astype(jnp.float32)
+        gb = g_ref[0].astype(jnp.float32)
+        ub = u_ref[0].astype(jnp.float32)
+        dzg = (dhb * ub * act_bwd(gb, "silu")).astype(dh_ref.dtype)
+        dzu = (dhb * act_fwd(gb, "silu")).astype(dh_ref.dtype)
+        for k in range(kb):
+            xT = x_refs[k][0].T
+            accg_ref[k] = accg_ref[k] + jnp.dot(
+                xT, dzg, preferred_element_type=jnp.float32)
+            accu_ref[k] = accu_ref[k] + jnp.dot(
+                xT, dzu, preferred_element_type=jnp.float32)
+
+        @pl.when(m == nm - 1)
+        def _apply():
+            lr = hyp_ref[0]
+            mgv = accg_ref[...]
+            miv = accu_ref[...]
+            if has_mom:
+                mgv = hyp_ref[1] * mg_ref[0, 0] + mgv
+                miv = hyp_ref[1] * mi_ref[0, 0] + miv
+                new_mg_ref[0, 0] = mgv
+                new_mi_ref[0, 0] = miv
+            new_wg_ref[0, 0] = (wg_ref[0, 0].astype(jnp.float32)
+                                - lr * mgv).astype(new_wg_ref.dtype)
+            new_wi_ref[0, 0] = (wi_ref[0, 0].astype(jnp.float32)
+                                - lr * miv).astype(new_wi_ref.dtype)
+
+    row = pl.BlockSpec((1, bm, bs), lambda e, o, m, *_: (e, m, o))
+    in_specs = [row, row, row]
+    inputs = [dh, g, u]
+    for k in range(kb):
+        in_specs.append(pl.BlockSpec(
+            (1, bm, bs), lambda e, o, m, idx, hyp, k=k: (e, m, idx[o, k])))
+        inputs.append(x)
+
+    wspec = pl.BlockSpec((1, 1, kb, bs, bs), lambda e, o, m, *_: (e, o, 0, 0, 0))
+    aliases: dict[int, int] = {}
+    out_specs, out_shape = [], []
+
+    def alias_io(arr):
+        aliases[N_SCALAR_PREFETCH_UPDATE + len(inputs)] = len(out_shape)
+        in_specs.append(wspec)
+        inputs.append(arr)
+        out_specs.append(wspec)
+        out_shape.append(jax.ShapeDtypeStruct(arr.shape, arr.dtype))
+
+    alias_io(wg)
+    alias_io(wi)
+    if has_mom:
+        alias_io(mg)
+        alias_io(mi)
+
+    outs = pl.pallas_call(
+        fused_update_gated_dw,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=N_SCALAR_PREFETCH_UPDATE,
+            grid=(E, nob, nm),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((kb, bs, bs), jnp.float32),
+                            pltpu.VMEM((kb, bs, bs), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(idx, hyp, *inputs)
+    if has_mom:
+        return outs[0], outs[1], outs[2], outs[3]
+    return outs[0], outs[1], None, None

@@ -21,6 +21,14 @@ pattern), NOT pre-gathered in XLA — and UP (gradient of eq. (3)) through
 from the saved residual so the elementwise grad tensor never round-trips
 HBM.
 
+``junction_train_update`` is the fused BP+UP twin: same forward, but the
+backward consumes the weight gradient *inside* the update kernels —
+``w -= lr * (momentum * m + dw)`` applied in the kernel epilogue with the
+updated params/momenta returned as the weight operands' cotangents
+through ``input_output_aliasing`` — so ``dw`` never round-trips HBM (the
+paper's concurrent BP/UP pipeline; Dey et al. 2017's interleaved FF/BP/UP
+edge processor).
+
 ``block_sparse_matmul`` / ``expert_block_sparse_matmul`` /
 ``expert_gated_matmul`` remain as thin aliases over ``junction_matmul``.
 
@@ -80,45 +88,56 @@ class KernelSpec(NamedTuple):
     interpret: bool
 
 
+def _fwd_call(spec, x, ws, b, idx, save: bool):
+    """(y, res) through the forward kernels; res is the backward residual
+    ((g, u) for gated, pre-activation or y for plain activations, None
+    otherwise) — emitted only when ``save``."""
+    if spec.gated:
+        h, g, u = bsm.gated_fwd(x, ws[0], ws[1], idx, bm=spec.bm, bn=spec.bn,
+                                save_res=save, interpret=spec.interpret)
+        return h, ((g, u) if save else None)
+    needs_pre = spec.act in bsm.ACT_NEEDS_PRE
+    y, pre = bsm.fwd(x, ws[0], idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
+                     save_pre=save and needs_pre, interpret=spec.interpret)
+    if not save:
+        return y, None
+    return y, (pre if needs_pre else (y if spec.act != "none" else None))
+
+
+def _dx_call(spec, ws, res, dy, rev_ob, rev_t, rev_cnt):
+    """BP through the reverse pattern — the reverse weight bundles are
+    DMA'd HBM→VMEM inside the kernel from the forward-layout weights (no
+    XLA w[rev_ob, rev_t] pre-gather)."""
+    if spec.gated:
+        g, u = res
+        return bsm.gated_dx(dy, ws[0], ws[1], rev_ob, rev_t, rev_cnt, g, u,
+                            interpret=spec.interpret)
+    return bsm.dx(dy, ws[0], rev_ob, rev_t, rev_cnt, res, act=spec.act,
+                  interpret=spec.interpret)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _junction_core(spec, x, ws, b, idx, rev_ob, rev_t, rev_cnt):
     """x [E, M, nib*bs], ws tuple of 1 (plain) or 2 (gated) weight tensors
     [E, nob, kb, bs, bs], b [E, nob*bs] -> y [E, M, nob*bs]."""
-    if spec.gated:
-        h, _, _ = bsm.gated_fwd(x, ws[0], ws[1], idx, bm=spec.bm, bn=spec.bn,
-                                save_res=False, interpret=spec.interpret)
-        return h
-    y, _ = bsm.fwd(x, ws[0], idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
-                   save_pre=False, interpret=spec.interpret)
+    y, _ = _fwd_call(spec, x, ws, b, idx, save=False)
     return y
 
 
 def _junction_fwd(spec, x, ws, b, idx, rev_ob, rev_t, rev_cnt):
-    if spec.gated:
-        h, g, u = bsm.gated_fwd(x, ws[0], ws[1], idx, bm=spec.bm, bn=spec.bn,
-                                save_res=True, interpret=spec.interpret)
-        return h, (x, ws, (g, u), idx, rev_ob, rev_t, rev_cnt)
-    needs_pre = spec.act in bsm.ACT_NEEDS_PRE
-    y, pre = bsm.fwd(x, ws[0], idx, b, act=spec.act, bm=spec.bm, bn=spec.bn,
-                     save_pre=needs_pre, interpret=spec.interpret)
-    res = pre if needs_pre else (y if spec.act != "none" else None)
+    y, res = _fwd_call(spec, x, ws, b, idx, save=True)
     return y, (x, ws, res, idx, rev_ob, rev_t, rev_cnt)
 
 
 def _junction_bwd(spec, saved, dy):
     x, ws, res, idx, rev_ob, rev_t, rev_cnt = saved
-    # no XLA w[rev_ob, rev_t] pre-gather here: dx DMAs the reverse weight
-    # bundles HBM→VMEM inside the kernel from the forward-layout weights.
+    dxv = _dx_call(spec, ws, res, dy, rev_ob, rev_t, rev_cnt)
     if spec.gated:
         g, u = res
-        dxv = bsm.gated_dx(dy, ws[0], ws[1], rev_ob, rev_t, rev_cnt, g, u,
-                           interpret=spec.interpret)
         dwg, dwi = bsm.gated_dw(x, dy, idx, g, u, interpret=spec.interpret)
         dws = (dwg.astype(ws[0].dtype), dwi.astype(ws[1].dtype))
         db = jnp.zeros((dy.shape[0], dy.shape[2]), jnp.float32)
         return dxv, dws, db, None, None, None, None
-    dxv = bsm.dx(dy, ws[0], rev_ob, rev_t, rev_cnt, res, act=spec.act,
-                 interpret=spec.interpret)
     dwv, dbv = bsm.dw(x, dy, idx, res, act=spec.act,
                       with_bias=spec.has_bias, interpret=spec.interpret)
     if dbv is None:  # bias-free layer: the zero-bias operand gets zeros
@@ -127,6 +146,59 @@ def _junction_bwd(spec, saved, dy):
 
 
 _junction_core.defvjp(_junction_fwd, _junction_bwd)
+
+
+# ------------------------------------------------- fused BP+UP custom_vjp
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _junction_update_core(spec, x, ws, b, moms, mom_b, hyp, idx,
+                          rev_ob, rev_t, rev_cnt):
+    """Forward identical to _junction_core; the vjp's cotangents for the
+    parameter operands are the SGD(+momentum)-UPDATED values computed by
+    the fused update_dw kernels (kernels/block_sparse_matmul.py) — the
+    paper's concurrent BP+UP pipeline.  moms is a tuple mirroring ws
+    (empty for plain SGD), mom_b a 0/1-tuple, hyp the [lr, momentum] f32
+    pair.  The weight gradient never materializes in HBM: it lives in
+    VMEM scratch and is consumed by the in-kernel update, whose outputs
+    alias the parameter inputs."""
+    y, _ = _fwd_call(spec, x, ws, b, idx, save=False)
+    return y
+
+
+def _junction_update_fwd(spec, x, ws, b, moms, mom_b, hyp, idx,
+                         rev_ob, rev_t, rev_cnt):
+    y, res = _fwd_call(spec, x, ws, b, idx, save=True)
+    return y, (x, ws, b, res, moms, mom_b, hyp, idx, rev_ob, rev_t, rev_cnt)
+
+
+def _junction_update_bwd(spec, saved, dy):
+    x, ws, b, res, moms, mom_b, hyp, idx, rev_ob, rev_t, rev_cnt = saved
+    dxv = _dx_call(spec, ws, res, dy, rev_ob, rev_t, rev_cnt)
+    if spec.gated:
+        g, u = res
+        nwg, nwi, nmg, nmi = bsm.update_gated_dw(
+            x, dy, idx, g, u, ws[0], ws[1],
+            moms[0] if moms else None, moms[1] if moms else None,
+            hyp, interpret=spec.interpret)
+        new_ws = (nwg, nwi)
+        new_moms = (nmg, nmi) if moms else ()
+        new_b = jnp.zeros_like(b)    # gated junctions carry no bias
+        new_mom_b = ()
+    else:
+        nw, nb, nm, nmb = bsm.update_dw(
+            x, dy, idx, res, ws[0], b if spec.has_bias else None,
+            moms[0] if moms else None,
+            mom_b[0] if mom_b else None,
+            hyp, act=spec.act, with_bias=spec.has_bias,
+            interpret=spec.interpret)
+        new_ws = (nw,)
+        new_moms = (nm,) if moms else ()
+        new_b = nb if spec.has_bias else jnp.zeros_like(b)
+        new_mom_b = (nmb,) if mom_b else ()
+    return (dxv, new_ws, new_b, new_moms, new_mom_b, jnp.zeros_like(hyp),
+            None, None, None, None)
+
+
+_junction_update_core.defvjp(_junction_update_fwd, _junction_update_bwd)
 
 
 def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
@@ -149,6 +221,23 @@ def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
     gated = wi is not None
     if gated and (bias is not None or act != "none"):
         raise ValueError("gated junction fixes act=silu-gate and takes no bias")
+    single, lead, x3, w5, wi5, b2, E, M, nob, bs, bm, bn = _prep_junction(
+        x, w, wi, bias, bm, bn, gated)
+    b = (jnp.zeros((E, nob * bs), x.dtype) if b2 is None
+         else b2.astype(x.dtype))
+    ws = ((w5.astype(x.dtype), wi5.astype(x.dtype)) if gated
+          else (w5.astype(x.dtype),))
+    spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
+                      has_bias=bias is not None, interpret=interpret)
+    y = _junction_core(spec, x3, ws, b, idx, rev_ob, rev_t, rev_cnt)
+    y = y[:, :M]
+    return y.reshape(*lead, nob * bs) if single else y
+
+
+def _prep_junction(x, w, wi, bias, bm, bn, gated):
+    """Shared shape/tile/pad preprocessing of the junction wrappers: the
+    4-D (single) vs 5-D (expert-batched) squeeze, tile selection and row
+    padding."""
     single = w.ndim == 4
     if single:
         lead = x.shape[:-1]
@@ -170,15 +259,7 @@ def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
     if nob % bn:
         bn = 1
     x3, M = _pad_junction_rows(x3, bm)
-    b = (jnp.zeros((E, nob * bs), x.dtype) if b2 is None
-         else b2.astype(x.dtype))
-    ws = ((w5.astype(x.dtype), wi5.astype(x.dtype)) if gated
-          else (w5.astype(x.dtype),))
-    spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
-                      has_bias=bias is not None, interpret=interpret)
-    y = _junction_core(spec, x3, ws, b, idx, rev_ob, rev_t, rev_cnt)
-    y = y[:, :M]
-    return y.reshape(*lead, nob * bs) if single else y
+    return single, lead, x3, w5, wi5, b2, E, M, nob, bs, bm, bn
 
 
 def _pad_junction_rows(x, bm):
@@ -187,6 +268,72 @@ def _pad_junction_rows(x, bm):
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
     return x, M
+
+
+def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
+                          wi=None, bias=None, act: str = "none",
+                          mom=None, mom_wi=None, mom_b=None,
+                          interpret: bool | None = None,
+                          bm: int | None = None, bn: int | None = None):
+    """The fused BP+UP junction — forward y = act(x @ W_sparse + bias)
+    exactly like ``junction_matmul``, but the custom_vjp's cotangents for
+    the parameter operands (w / wi / bias and their momentum buffers) are
+    the SGD(+momentum)-UPDATED values: the backward runs BP through the
+    in-kernel-DMA ``dx`` kernels against the OLD weights, reduces the
+    weight gradient into VMEM scratch, and applies
+
+        mom' = hyp[1] * mom + dw        (fp32)
+        w'   = (w - hyp[0] * mom').astype(w.dtype)
+
+    in the same kernel epilogue, writing w'/mom' through
+    ``input_output_aliasing`` — ``dw`` never materializes in HBM (the
+    paper's concurrent edge-processor UP stage).  A fused train step
+    treats these cotangents as the new parameters (train/steps.py);
+    ``optim.fused_sgd`` adopts them and tree-maps the dense leaves.
+
+    hyp: ``[lr, momentum]`` as a (2,) f32 array (streamed through scalar
+    prefetch).  mom/mom_wi/mom_b: fp32 momentum accumulators matching
+    w/wi/bias (all None → plain SGD).  Requires ``w.dtype == x.dtype``:
+    the fused path must not cast weights (a cast would re-materialize
+    them and its vjp would corrupt the updated-params contract).
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    gated = wi is not None
+    if gated and (bias is not None or act != "none"):
+        raise ValueError("gated junction fixes act=silu-gate and takes no bias")
+    if w.dtype != x.dtype or (gated and wi.dtype != x.dtype) or (
+            bias is not None and bias.dtype != x.dtype):
+        raise ValueError(
+            "junction_train_update requires param dtype == activation dtype "
+            f"(got w={w.dtype}, x={x.dtype}) — run the two-pass path for "
+            "mixed-precision casts")
+    if (mom is None) != (mom_wi is None) and gated:
+        raise ValueError("gated junction needs momentum for both branches")
+    for name, m in (("mom", mom), ("mom_wi", mom_wi), ("mom_b", mom_b)):
+        if m is not None and m.dtype != jnp.float32:
+            raise ValueError(f"{name} must be an fp32 accumulator "
+                             f"(got {m.dtype}) — the momentum state stays "
+                             "full-precision even for bf16 params")
+    hyp = jnp.asarray(hyp, jnp.float32)
+    if hyp.shape != (2,):
+        raise ValueError(f"hyp must be the [lr, momentum] pair, got {hyp.shape}")
+    single, lead, x3, w5, wi5, b2, E, M, nob, bs, bm, bn = _prep_junction(
+        x, w, wi, bias, bm, bn, gated)
+    b = jnp.zeros((E, nob * bs), x.dtype) if b2 is None else b2
+    ws = (w5, wi5) if gated else (w5,)
+    if mom is not None:
+        mom5 = mom[None] if single else mom
+        moms = (mom5, mom_wi[None] if single else mom_wi) if gated else (mom5,)
+        mom_b_t = () if (mom_b is None or bias is None) else (
+            (mom_b[None] if single else mom_b),)
+    else:
+        moms, mom_b_t = (), ()
+    spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
+                      has_bias=bias is not None, interpret=interpret)
+    y = _junction_update_core(spec, x3, ws, b, moms, mom_b_t, hyp,
+                              idx, rev_ob, rev_t, rev_cnt)
+    y = y[:, :M]
+    return y.reshape(*lead, nob * bs) if single else y
 
 
 def block_sparse_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, bias=None,

@@ -105,7 +105,7 @@ def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, microbatches: int = 1):
         bspecs = sh.batch_specs(cfg, batch, mesh)
         bstruct = sh.attach(batch, bspecs, mesh)
         step = jax.ShapeDtypeStruct((), jnp.int32)
-        fn = make_train_step(cfg, opt, microbatches=microbatches)
+        fn = make_train_step(cfg, opt, microbatches=microbatches, jit=False)
         jitted = jax.jit(fn, donate_argnums=(0, 1),
                          out_shardings=(sh.to_shardings(pspecs, mesh),
                                         sh.to_shardings(ospecs, mesh), None))

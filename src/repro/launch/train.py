@@ -84,7 +84,9 @@ def main():
 
     params = M.init(cfg, jax.random.PRNGKey(0))
     opt_state = opt.init(params)
-    step_fn = make_train_step(cfg, opt, microbatches=args.microbatches)
+    # raw fn: the mesh/sharding branch below attaches its own jit+donation
+    step_fn = make_train_step(cfg, opt, microbatches=args.microbatches,
+                              jit=False)
 
     n_dev = args.data * args.model
     if n_dev > 1:

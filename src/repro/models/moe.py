@@ -122,10 +122,25 @@ def _expert_ffn_pallas(p: Params, xd, E: int):
     xd [G,E,C,d] -> [G,E,C,d].  Both junctions go through the same
     ``junction_matmul`` custom_vjp the dense-model layers use — the gate
     (silu(x@wg) * (x@wi)) as ONE fused pass via ``wi=``, wo as the plain
-    E-batched configuration."""
+    E-batched configuration.  When the fused-update context rides in the
+    params dict (train/steps.py injection), both junctions run through
+    ``junction_train_update`` instead: the per-expert weight gradients
+    are consumed by the in-kernel SGD(+momentum) update and the updated
+    wg/wi/wo come back as their cotangents."""
     from repro.kernels import ops  # local import: kernels optional at runtime
     G, _, C, D = xd.shape
     xe = jnp.moveaxis(xd, 1, 0).reshape(E, G * C, D)
+    if sl.UPDATE_HYP_LEAF in p:
+        hyp = p[sl.UPDATE_HYP_LEAF]
+        h = ops.junction_train_update(
+            xe, p["wg"], p["idx_in"],
+            p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"], wi=p["wi"],
+            hyp=hyp, mom=p.get("mom_wg"), mom_wi=p.get("mom_wi"))
+        ye = ops.junction_train_update(
+            h, p["wo"], p["idx_out"],
+            p["rev_out_ob"], p["rev_out_t"], p["rev_out_cnt"],
+            hyp=hyp, mom=p.get("mom_wo"))
+        return jnp.moveaxis(ye.reshape(E, G, C, -1), 0, 1)
     h = ops.junction_matmul(
         xe, p["wg"], p["idx_in"],
         p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"], wi=p["wi"])

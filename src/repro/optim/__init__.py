@@ -1,4 +1,4 @@
-from repro.optim.optimizers import (Optimizer, adam, sgd, clip_by_global_norm,
-                                    trainable_mask)
+from repro.optim.optimizers import (FusedSGD, Optimizer, adam, fused_sgd,
+                                    sgd, clip_by_global_norm, trainable_mask)
 from repro.optim.schedule import (paper_halving_schedule, cosine_schedule,
                                   constant_schedule)

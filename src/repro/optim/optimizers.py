@@ -51,6 +51,112 @@ def sgd(lr_fn: Callable[[jax.Array], jax.Array]) -> Optimizer:
     return Optimizer(init, update)
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedSGD(Optimizer):
+    """SGD(+momentum) that can run fused with the backward pass.
+
+    ``update`` is the ordinary TWO-PASS reference (clip → momentum →
+    apply, tree-mapped over materialized gradients) — the path the jnp
+    engine, dry-run and any ineligible config use.  A fused train step
+    (train/steps.py, behind ``ArchConfig.fused_update``) instead injects
+    ``hyp(step)`` + the momentum buffers into the junction dicts before
+    differentiating, lets the ``junction_train_update`` kernels apply the
+    update in the backward epilogue, and calls :meth:`merge` to adopt the
+    updated junction leaves and tree-map only the dense remainder.
+    ``grad_clip`` is incompatible with fusing (it needs the full gradient
+    tree first) — setting it forces the two-pass path.
+    """
+    lr_fn: Callable[[jax.Array], jax.Array] = None
+    momentum: float = 0.0
+    grad_clip: float | None = None
+
+    def hyp(self, step) -> jax.Array:
+        """The (2,)-f32 [lr, momentum] operand the update kernels stream
+        through scalar prefetch."""
+        lr = jnp.asarray(self.lr_fn(step), jnp.float32)
+        return jnp.stack([lr, jnp.asarray(self.momentum, jnp.float32)])
+
+    def merge(self, grads, state, params, step):
+        """Fused-step merge: ``grads`` is the cotangent tree of the
+        *augmented* params (core/sparse_linear.inject_update_ctx) — its
+        junction weight/momentum leaves already ARE the updated values;
+        every other trainable leaf still carries a real gradient and gets
+        the same two-pass formula applied here."""
+        from repro.core import sparse_linear as sl
+        lr = self.lr_fn(step)
+        mom = state["mom"] if self.momentum else None
+
+        def dense(p, g, m):
+            if not _is_trainable(p):
+                return p, m
+            mv = g.astype(jnp.float32)
+            if self.momentum:
+                mv = self.momentum * m + mv
+            return (p.astype(jnp.float32) - lr * mv).astype(p.dtype), mv
+
+        def rec(g, p, m):
+            if isinstance(p, dict):
+                junction = sl.is_junction(p)
+                new_p, new_m = {}, {}
+                for k, v in p.items():
+                    mk = m[k] if m is not None else None
+                    if isinstance(v, (dict, list, tuple)):
+                        new_p[k], new_m[k] = rec(g[k], v, mk)
+                    elif (junction and k in sl.FUSED_MOM
+                          and _is_trainable(v)):
+                        new_p[k] = g[k]                       # updated param
+                        new_m[k] = (g[sl.FUSED_MOM[k]]        # updated buffer
+                                    if m is not None else None)
+                    else:
+                        new_p[k], new_m[k] = dense(v, g[k], mk)
+                return new_p, new_m
+            if isinstance(p, (list, tuple)):
+                pairs = [rec(g[i], v, m[i] if m is not None else None)
+                         for i, v in enumerate(p)]
+                return (type(p)(a for a, _ in pairs),
+                        type(p)(b for _, b in pairs))
+            return dense(p, g, m)
+
+        new_params, new_mom = rec(grads, params, mom)
+        return new_params, ({"mom": new_mom} if self.momentum else state)
+
+
+def fused_sgd(lr_fn: Callable[[jax.Array], jax.Array], momentum: float = 0.0,
+              grad_clip: float | None = None) -> FusedSGD:
+    """SGD with optional momentum, fusable into the backward kernels.
+
+    Reference semantics (what both paths compute, in fp32):
+        m' = momentum * m + g
+        p' = (p - lr * m').astype(p.dtype)
+    Momentum accumulators are fp32 even for bf16 params."""
+    def init(params):
+        if not momentum:
+            return ()
+        zeros = lambda p: (jnp.zeros(jnp.shape(p), jnp.float32)
+                           if _is_trainable(p) else jnp.zeros((), jnp.float32))
+        return {"mom": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr = lr_fn(step)
+        if momentum:
+            mv = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32)
+                if _is_trainable(g) else m, state["mom"], grads)
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype)
+                if _is_trainable(p) else p, params, mv)
+            return new_params, {"mom": mv}
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype)
+            if _is_trainable(p) else p, params, grads)
+        return new_params, state
+    return FusedSGD(init=init, update=update, lr_fn=lr_fn,
+                    momentum=momentum, grad_clip=grad_clip)
+
+
 def adam(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
          grad_clip: float | None = 1.0, master_copy: bool = False) -> Optimizer:
     """Adam with optional fp32 master copies.

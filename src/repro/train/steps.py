@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import sparse_linear as sl
 from repro.models import model as M
-from repro.optim import Optimizer
+from repro.optim import FusedSGD, Optimizer
 
 
 def _resolve_engine(cfg: ArchConfig) -> ArchConfig:
@@ -28,14 +28,89 @@ def _resolve_engine(cfg: ArchConfig) -> ArchConfig:
     return cfg if eng == cfg.engine else dataclasses.replace(cfg, engine=eng)
 
 
+def fused_update_eligible(cfg: ArchConfig, optimizer: Optimizer,
+                          microbatches: int = 1) -> tuple[bool, str]:
+    """(ok, reason) — whether the fused BP+UP path can serve this step.
+    Resolved ONCE at step-build time; every refusal falls back to the
+    two-pass reference path (grads materialized, optimizer.update), never
+    to silently different numerics."""
+    cfg = _resolve_engine(cfg)
+    if not cfg.fused_update:
+        return False, "ArchConfig.fused_update is off"
+    if cfg.engine != "pallas":
+        return False, "engine is not pallas (jnp keeps the two-pass reference)"
+    if not isinstance(optimizer, FusedSGD):
+        return False, "optimizer is not optim.fused_sgd"
+    if cfg.family == "hybrid":
+        # the shared attn/MLP block is applied once per super-layer, and
+        # JAX SUMS cotangents across uses — but a fused junction's
+        # cotangent IS the updated parameter, so summing corrupts any
+        # weight-shared junction.  Refuse, don't corrupt.
+        return False, ("hybrid shares one attn/MLP block across "
+                       "super-layers — reused junction weights break the "
+                       "updated-params cotangent contract")
+    if optimizer.grad_clip is not None:
+        return False, ("grad_clip needs the materialized gradient tree — "
+                       "refusing the fused path")
+    if microbatches != 1:
+        return False, "microbatch accumulation needs materialized grads"
+    if cfg.cast_params_once:
+        return False, "cast_params_once re-materializes the weights"
+    if cfg.param_dtype != cfg.dtype:
+        return False, ("fused update requires param_dtype == dtype (the "
+                       "kernels update the compute-dtype weights in place)")
+    return True, "fused"
+
+
+def _make_fused_train_step(cfg: ArchConfig, optimizer: FusedSGD):
+    """The fused BP+UP step: the paper's concurrent backprop+update made
+    literal.  The momentum buffers and the [lr, momentum] pair are
+    injected into every junction dict before differentiating; the
+    junction custom_vjp applies the update inside the backward kernels
+    (weight gradients never reach HBM) and returns the UPDATED params /
+    momenta as those leaves' cotangents; optimizer.merge adopts them and
+    tree-maps only the dense leaves."""
+    def loss(aug_params, batch):
+        return M.loss_fn(cfg, aug_params, batch)
+
+    vg = jax.value_and_grad(loss, has_aux=True, allow_int=True)
+
+    def train_step(params, opt_state, batch, step):
+        mom = opt_state["mom"] if optimizer.momentum else None
+        aug = sl.inject_update_ctx(params, mom, optimizer.hyp(step))
+        (l, metrics), grads = vg(aug, batch)
+        new_params, new_opt = optimizer.merge(grads, opt_state, params, step)
+        return new_params, new_opt, dict(metrics, loss=l)
+
+    return train_step
+
+
 def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
-                    microbatches: int = 1):
+                    microbatches: int = 1, *, jit: bool = True,
+                    donate: bool = True):
     """Returns train_step(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    By default the step comes back jit-compiled with params/opt_state
+    DONATED (donate_argnums=(0, 1)): the caller's buffers are reused for
+    the outputs instead of doubling peak memory across the update.  Pass
+    donate=False when the caller must keep its input trees alive, or
+    jit=False to get the raw function (launchers that attach shardings /
+    lower explicitly).
 
     With microbatches > 1 the batch is split and gradients accumulated in a
     scan — per-microbatch psums overlap with the next microbatch's compute
-    (the paper's operational parallelization applied at the pod scale)."""
+    (the paper's operational parallelization applied at the pod scale).
+
+    When ``cfg.fused_update`` holds and the config/optimizer are eligible
+    (fused_update_eligible), the returned step runs the fused BP+UP path;
+    otherwise the two-pass reference below."""
     cfg = _resolve_engine(cfg)
+    fused, _ = fused_update_eligible(cfg, optimizer, microbatches)
+    if fused:
+        step_fn = _make_fused_train_step(cfg, optimizer)
+        if jit:
+            return jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+        return step_fn
 
     def loss(params, batch):
         if cfg.cast_params_once:
@@ -78,6 +153,8 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
         metrics = dict(metrics, loss=l)
         return new_params, new_opt, metrics
 
+    if jit:
+        return jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
     return train_step
 
 

@@ -36,7 +36,7 @@ def test_train_step(arch):
     params = M.init(cfg, jax.random.PRNGKey(0))
     opt = adam(constant_schedule(1e-3))
     st = opt.init(params)
-    ts = jax.jit(make_train_step(cfg, opt))
+    ts = make_train_step(cfg, opt, donate=False)  # params compared after
     batch = _batch(cfg)
     p2, st2, metrics = ts(params, st, batch, jnp.asarray(0))
     assert jnp.isfinite(metrics["loss"])

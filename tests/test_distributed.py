@@ -73,7 +73,7 @@ def test_sharded_train_matches_single_device():
         opt = adam(constant_schedule(1e-3), grad_clip=None)
         st = opt.init(params)
         batch = concrete_batch(cfg, 4, 64, jax.random.PRNGKey(3))
-        fn = make_train_step(cfg, opt)
+        fn = make_train_step(cfg, opt, jit=False)  # shardings jit below
 
         # single device reference
         p1, s1, m1 = jax.jit(fn)(params, st, batch, jnp.asarray(0))

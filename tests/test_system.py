@@ -26,7 +26,7 @@ def test_train_loop_loss_falls(small, tmp_path):
     cfg, params = small
     opt = adam(cosine_schedule(3e-4, 10, 60))
     st = opt.init(params)
-    ts = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    ts = make_train_step(cfg, opt)   # jitted + donating by default now
     pipe = LMTokenPipeline(cfg, 8, 128)
     res = run(TrainLoopConfig(total_steps=60, ckpt_dir=str(tmp_path),
                               ckpt_every=30, log_every=10),
@@ -42,7 +42,8 @@ def test_crash_and_resume(small, tmp_path):
 
     def fresh():
         opt = adam(constant_schedule(1e-3))
-        return opt.init(params), jax.jit(make_train_step(cfg, opt))
+        # donate=False: the fixture params tree is reused across runs
+        return opt.init(params), make_train_step(cfg, opt, donate=False)
 
     st, ts = fresh()
     r1 = run(TrainLoopConfig(40, str(tmp_path / "a"), ckpt_every=10,
@@ -81,7 +82,7 @@ def test_grad_compression_training_parity(small):
                        ("int8", grad_compress.compressed)]:
         opt = wrap(adam(constant_schedule(1e-3)))
         st = opt.init(params)
-        ts = jax.jit(make_train_step(cfg, opt))
+        ts = make_train_step(cfg, opt, donate=False)  # params reused per wrap
         pipe = LMTokenPipeline(cfg, 4, 64)
         p = params
         m = None
