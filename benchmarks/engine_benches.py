@@ -23,6 +23,13 @@ fused BP+UP path (update applied in the backward kernels' epilogue,
 params donated through input_output_aliasing — the dw HBM round-trip the
 fused path exists to delete).
 
+``bench.sweep.mnist.*`` rows (ISSUE 5) time the population engine: one
+E-batched population train step (E MNIST candidates with distinct
+learning rates advancing in single kernel launches via the [E, 2] hyp
+table) against E sequential single-model steps doing the same total
+work — the resource-vs-training-time trade the sweep subsystem
+(src/repro/search/) turns into a user-facing knob.
+
 Off-TPU the Pallas rows run in interpret mode — an emulator, so their
 absolute numbers only become meaningful on real hardware; the jnp rows
 are the portable baseline.  ``BENCH_*.json`` (benchmarks/run.py --json)
@@ -256,4 +263,73 @@ def bench(fast=True):
                        f"sgd-momentum {'fused' if engine == 'pallas' else 'two-pass'} "
                        f"mode={mode}",
         })
+    rows.extend(_sweep_rows(fast, on_tpu))
+    return rows
+
+
+# ------------------------------------------------- population-sweep rows
+def _time_population_steps(step_fns, states, xb, tb, n=3):
+    """Mean wall time of one 'generation': every (step, state) pair
+    advanced once — ONE call for the E-batched population, E calls for
+    the sequential baseline."""
+    def run(states):
+        out = []
+        for fn, (p, m, h, k) in zip(step_fns, states):
+            out.append(fn(p, m, h, k, xb, tb))
+        jax.block_until_ready([o[2] for o in out])
+        return [(p, m, h, k) for (p, m, _), (_, _, h, k) in zip(out, states)]
+
+    states = run(states)            # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        states = run(states)
+    return (time.perf_counter() - t0) / n
+
+
+def _sweep_rows(fast, on_tpu):
+    """bench.sweep.mnist.{population,sequential}: E=4 MNIST candidates,
+    distinct lrs, one E-batched step vs E sequential single-model steps
+    (same structure, same data, same update math)."""
+    from repro.search import CandidateSpec, hyp_table, init_population
+    from repro.search import population as pop
+
+    E = 4
+    layers = (1024, 512, 128)
+    M = 256 if fast else 12544
+    engine = sl.resolve_engine("auto")
+    mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+    specs = [CandidateSpec(lr=0.02 * (i + 1), momentum=0.9, density=0.25,
+                           layers=layers, block=128, init_seed=i)
+             for i in range(E)]
+    key = jax.random.PRNGKey(0)
+    xb = jax.random.uniform(jax.random.PRNGKey(1), (M, layers[0]))
+    tb = jax.nn.one_hot(
+        jax.random.randint(jax.random.PRNGKey(2), (M,), 0, 10), layers[-1])
+
+    pop_params = init_population(key, specs)
+    batched = [(pop_params, pop.init_momentum(pop_params), hyp_table(specs),
+                jnp.ones((E,), jnp.float32))]
+    step = pop.make_population_step(engine=engine, donate=False)
+    dt = _time_population_steps([step], batched, xb, tb)
+    rows = [{
+        "name": "bench.sweep.mnist.population",
+        "us_per_call": dt * 1e6,
+        "derived": f"E={E} M={M} layers={'x'.join(map(str, layers))} "
+                   f"one E-batched step engine={engine} mode={mode}",
+    }]
+
+    seq = []
+    for i in range(E):
+        p1 = init_population(key, specs[i:i + 1])
+        seq.append((p1, pop.init_momentum(p1), hyp_table(specs[i:i + 1]),
+                    jnp.ones((1,), jnp.float32)))
+    step1 = pop.make_population_step(engine=engine, donate=False)
+    dt = _time_population_steps([step1] * E, seq, xb, tb)
+    rows.append({
+        "name": "bench.sweep.mnist.sequential",
+        "us_per_call": dt * 1e6,
+        "derived": f"E={E} M={M} layers={'x'.join(map(str, layers))} "
+                   f"{E} sequential single-model steps engine={engine} "
+                   f"mode={mode}",
+    })
     return rows

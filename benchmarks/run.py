@@ -2,7 +2,7 @@
 + the engine-comparison benches.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,engine]
-                                            [--json PATH]
+                                            [--json PATH] [--tag TAG]
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract); with
 ``--json PATH`` also writes a ``BENCH_<tag>.json`` artifact so the perf
@@ -13,45 +13,25 @@ the movement).  The artifact schema is
      "results": {name: us_per_call}}
 
 — the meta stamp makes artifacts from different PRs comparable (same
-backend? which commit?).  Readers should use :func:`load_artifact`,
-which also accepts the pre-stamp flat ``{name: us_per_call}`` schema.
+backend? which commit?).  ``--tag`` sets ``meta.tag`` explicitly
+(default: derived from the --json filename), the same contract the
+sweep ledger uses (``repro.launch.sweep --tag``).  Readers should use
+:func:`load_artifact`, which round-trips the meta (tag included) and
+also accepts the pre-stamp flat ``{name: us_per_call}`` schema.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import subprocess
 import sys
 import time
 
 
-def _git_sha() -> str:
-    """Short HEAD sha, with a -dirty marker when the tree has uncommitted
-    changes — numbers measured on a dirty tree must not be attributed to
-    the clean commit."""
-    try:
-        sha = subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"],
-            capture_output=True, text=True, timeout=10, check=True,
-        ).stdout.strip()
-        dirty = subprocess.run(
-            ["git", "status", "--porcelain"],
-            capture_output=True, text=True, timeout=10, check=True,
-        ).stdout.strip()
-        return f"{sha}-dirty" if dirty else sha
-    except Exception:
-        return "unknown"
-
-
 def artifact_meta(tag: str) -> dict:
-    import jax
-    return {
-        "git_sha": _git_sha(),
-        "backend": jax.default_backend(),
-        "jax_version": jax.__version__,
-        "tag": tag,
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
-    }
+    # the stamp schema (+ git -dirty detection) is shared with the sweep
+    # ledger — one implementation, repro.artifacts
+    from repro.artifacts import artifact_meta as _meta
+    return _meta(tag)
 
 
 def load_artifact(path: str) -> tuple[dict, dict[str, float]]:
@@ -81,6 +61,9 @@ def main() -> None:
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write a BENCH_<tag>.json artifact "
                          "(name -> us_per_call) at PATH")
+    ap.add_argument("--tag", default="",
+                    help="artifact meta.tag (default: derived from the "
+                         "--json filename)")
     args = ap.parse_args()
 
     from benchmarks import engine_benches, paper_benches, roofline_table
@@ -117,7 +100,7 @@ def main() -> None:
         sys.stderr.write(f"[bench] {name}: {len(rows)} rows "
                          f"in {time.perf_counter() - t0:.1f}s\n")
     if args.json:
-        meta = artifact_meta(_tag_from_path(args.json))
+        meta = artifact_meta(args.tag or _tag_from_path(args.json))
         with open(args.json, "w") as f:
             json.dump({"meta": meta, "results": results}, f,
                       indent=2, sort_keys=True)

@@ -1,17 +1,21 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + the fast machine-trackable benches.
+# CI entry point: tier-1 test suite + sweep smoke + fast benches.
 #
-#   ./ci.sh                     # tests + engine/roofline benches, BENCH_ci.json
+#   ./ci.sh                     # tests + sweep smoke + engine/roofline benches
 #   ./ci.sh --fail-on-regress   # exit nonzero when engine.* rows regress
 #   BENCH_TAG=pr42 ./ci.sh
 #
-# Fails on test failures, bench harness errors (benchmarks/run.py exits
-# nonzero when any bench raises or --only names an unknown bench), or an
-# empty bench artifact (guards the silent-no-op class of regressions).
+# Fails on test failures, a population sweep that names no winner (the
+# tiny 2-round MNIST density x lr smoke, E=4 candidates — guards the
+# search subsystem end to end), bench harness errors (benchmarks/run.py
+# exits nonzero when any bench raises or --only names an unknown bench),
+# or an empty bench artifact (guards the silent-no-op class of
+# regressions).
 # Additionally compares the fresh artifact against the committed
 # benchmarks/BENCH_baseline.json: by default it WARNS (non-fatal —
-# interpret-mode timings are noisy off-TPU) when any engine.* row slows
-# past its threshold; with --fail-on-regress the comparison is fatal.
+# interpret-mode timings are noisy off-TPU) when any engine.*/bench.*
+# row slows past its threshold; with --fail-on-regress the comparison is
+# fatal.
 # Per-row thresholds live in the THRESHOLDS table below (default 1.2x;
 # noisier rows get more headroom).
 set -euo pipefail
@@ -31,8 +35,26 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 TAG="${BENCH_TAG:-ci}"
-echo "== fast benches (engine incl. MoE + fused-update rows, roofline) =="
-python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json"
+
+echo "== sweep smoke (population engine: 2-round MNIST density x lr, E=4) =="
+python -m repro.launch.sweep --densities 0.25,0.5 --lrs 0.05,0.2 \
+  --rounds 2 --steps-per-round 2 --batch 32 --samples 256 --eval-samples 64 \
+  --block 32 --hidden 128 --engine jnp --tag "$TAG" --out "SWEEP_${TAG}.json"
+python - "SWEEP_${TAG}.json" <<'PY'
+import json, sys
+led = json.load(open(sys.argv[1]))
+w = led.get("winner")
+if not (w and w.get("config") and w.get("eval_losses")):
+    sys.exit(f"[ci] sweep ledger {sys.argv[1]} names no winner")
+pruned = sum(1 for m in led["members"] if m["pruned_at"] is not None)
+print(f"[ci] sweep winner: density={w['config']['density']} "
+      f"lr={w['config']['lr']} eval_loss={w['eval_losses'][-1]:.4f} "
+      f"({pruned}/{len(led['members'])} pruned)")
+PY
+
+echo "== fast benches (engine incl. MoE + fused-update rows, sweep, roofline) =="
+python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json" \
+  --tag "$TAG"
 
 python - "BENCH_${TAG}.json" benchmarks/BENCH_baseline.json "$FAIL_ON_REGRESS" <<'PY'
 import sys
@@ -40,13 +62,15 @@ from benchmarks.run import load_artifact
 
 # Per-row slowdown thresholds (new/old ratio).  The single-call-dominated
 # MoE rows jitter more off-TPU than the plain junction rows; fused-update
-# rows time a whole train step and inherit that noise.
+# and sweep rows time whole train steps and inherit that noise.
 DEFAULT_THRESHOLD = 1.2
 THRESHOLDS = {
     "engine.moe.jnp": 1.35,
     "engine.moe.pallas": 1.35,
     "engine.update.moe.jnp": 1.4,
     "engine.update.moe.pallas": 1.4,
+    "bench.sweep.mnist.population": 1.5,
+    "bench.sweep.mnist.sequential": 1.5,
 }
 
 path, base_path, fail_on_regress = sys.argv[1], sys.argv[2], sys.argv[3] == "1"
@@ -65,7 +89,9 @@ except (OSError, ValueError) as e:  # missing OR unreadable: stay non-fatal
     sys.exit(0)
 slow = []
 for name in sorted(base):
-    if not name.startswith("engine.") or name not in results:
+    # engine.* kernel rows AND bench.* subsystem rows (the population
+    # sweep) are both ratcheted against the committed baseline
+    if not name.startswith(("engine.", "bench.")) or name not in results:
         continue
     new, old = results[name], base[name]
     thresh = THRESHOLDS.get(name, DEFAULT_THRESHOLD)
@@ -76,7 +102,7 @@ for name in sorted(base):
     if ratio > thresh:
         slow.append(name)
 if slow:
-    msg = (f"{len(slow)} engine.* row(s) slower than their baseline "
+    msg = (f"{len(slow)} tracked bench row(s) slower than their baseline "
            f"threshold ({', '.join(slow)})")
     if fail_on_regress:
         sys.exit(f"[ci] FAIL: {msg}")

@@ -234,6 +234,31 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """Population-search run configuration (src/repro/search/): the
+    paper's resource-vs-training-time trade as user-facing knobs —
+    cohort size E comes from the candidate list, this fixes the rounds
+    side (successive halving) and the execution engine.
+
+    rounds: successive-halving rounds; after each, the live population
+        is ranked by eval loss and pruned to keep_fraction (pruned slots
+        are masked + hyp-zeroed in place — fixed shapes, no recompiles).
+    steps_per_round: fused E-batched train steps between prunes.
+    batch_size / eval_samples: shared-data minibatch and held-out sizes.
+    engine: "pallas" | "jnp" | "auto" (resolved once at step build);
+        fused applies only on the pallas engine.
+    """
+    rounds: int = 3
+    steps_per_round: int = 20
+    batch_size: int = 128
+    eval_samples: int = 512
+    keep_fraction: float = 0.5
+    seed: int = 0
+    engine: str = "auto"
+    fused: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeSpec:
     name: str
     seq_len: int

@@ -49,8 +49,10 @@ MOE_PATTERN_LEAVES = ("idx_in", "idx_out",
 # Fused BP+UP context leaves (train/steps.py injects them into every
 # pattern-bearing junction dict before differentiating; they exist only
 # inside the traced fused train step, never in the stored params tree):
-# UPDATE_HYP_LEAF carries the [lr, momentum] pair (broadcast over any layer
-# stacking dims so lax.scan slices it per layer), FUSED_MOM maps each
+# UPDATE_HYP_LEAF carries the [lr, momentum] pair — or, for E-batched
+# population junctions (src/repro/search/), a per-unit [E, 2] table —
+# broadcast over any layer stacking dims so lax.scan slices it per layer.
+# FUSED_MOM maps each
 # trainable junction weight leaf to its fp32 momentum accumulator's
 # injected name.  The custom_vjp returns the UPDATED params / momenta as
 # these leaves' cotangents — the "grads" tree of a fused step carries new
@@ -71,7 +73,10 @@ def inject_update_ctx(params, mom, hyp):
     junction dict: ``upd_hyp`` (broadcast to the junction's stacking dims,
     derived from its idx leaf) plus the junction's momentum accumulators
     from the mirrored ``mom`` tree (None → plain SGD, no mom leaves).
-    Dense leaves ride through untouched — the optimizer tree-maps them."""
+    ``hyp`` is the shared (2,) [lr, momentum] pair or — for E-batched
+    population junctions — a per-unit [E, 2] table; either shape rides
+    through to ``junction_train_update`` unchanged.  Dense leaves ride
+    through untouched — the optimizer tree-maps them."""
     def rec(p, m):
         if isinstance(p, dict):
             out = {}
@@ -83,7 +88,8 @@ def inject_update_ctx(params, mom, hyp):
             if is_junction(p):
                 idx = p["idx"] if "idx" in p else p["idx_in"]
                 stack = idx.shape[:-2]   # leading layer-scan dims
-                out[UPDATE_HYP_LEAF] = jnp.broadcast_to(hyp, stack + (2,))
+                out[UPDATE_HYP_LEAF] = jnp.broadcast_to(
+                    hyp, stack + tuple(jnp.shape(hyp)))
                 if m is not None:
                     for k, mk in FUSED_MOM.items():
                         if k in p and not isinstance(p[k], dict):

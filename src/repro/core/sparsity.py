@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.core import interleaver as il
 
-__all__ = ["SparsityConfig", "NeuronPattern", "BlockPattern", "make_block_pattern", "make_neuron_pattern"]
+__all__ = ["SparsityConfig", "NeuronPattern", "BlockPattern", "block_fan_in",
+           "make_block_pattern", "make_neuron_pattern"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +152,15 @@ class BlockPattern:
         return self.n_out_blocks * self.fan_in_blocks * self.block * self.block
 
 
+def block_fan_in(n_in_blocks: int, density: float) -> int:
+    """The fan-in block count kb ~= density * n_in_blocks a junction of
+    ``n_in_blocks`` input blocks gets at the requested density — the ONE
+    place the density -> structure quantization lives.  Candidates whose
+    densities round to the same kb share a pattern exactly (the cohort
+    bucketing rule of search/cohorts.py)."""
+    return min(n_in_blocks, max(1, round(density * n_in_blocks)))
+
+
 def make_block_pattern(n_in: int, n_out: int, density: float, block: int = 128,
                        seed: int = 0) -> BlockPattern:
     """Choose fan_in_blocks ~= density * n_in_blocks.  When the paper's
@@ -161,7 +171,7 @@ def make_block_pattern(n_in: int, n_out: int, density: float, block: int = 128,
     if n_in % block or n_out % block:
         raise ValueError(f"dims ({n_in},{n_out}) must be multiples of block={block}")
     nib, nob = n_in // block, n_out // block
-    kb = min(nib, max(1, round(density * nib)))
+    kb = block_fan_in(nib, density)
     idx = il.block_circulant_pattern(nib, nob, kb, seed=seed)
     rev_ob, rev_t, rev_cnt = il.reverse_block_pattern(idx, nib)
     return BlockPattern(n_in=n_in, n_out=n_out, block=block, idx=idx,

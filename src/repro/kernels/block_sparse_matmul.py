@@ -54,11 +54,15 @@ ONE block pattern that rides once in scalar prefetch — the paper's
   but instead of flushing the weight gradient to HBM the epilogue
   applies the SGD(+momentum) update **in-kernel** on the last M step:
 
-      mom' = hyp[1] * mom + dw_tile        (fp32, when momentum buffers
+      mom' = hyp[e, 1] * mom + dw_tile     (fp32, when momentum buffers
                                             ride along)
-      w'   = (w - hyp[0] * mom').astype(w.dtype)
+      w'   = (w - hyp[e, 0] * mom').astype(w.dtype)
 
-  ``hyp = [lr, momentum]`` streams through scalar prefetch; ``w`` (and
+  ``hyp`` is a per-unit ``[E, 2]`` [lr, momentum] table streaming through
+  scalar prefetch, indexed by the expert grid coordinate — every junction
+  unit sharing the pattern can train under DIFFERENT hyperparameters in
+  the same launch (the population-search contract, src/repro/search/; a
+  single model is the ``E=1`` row).  ``w`` (and
   the fp32 ``mom`` accumulators, and ``b``/``mom_b`` for biased layers)
   come in as per-(e, ob) resident tiles and leave as outputs declared
   with ``input_output_aliases``, so XLA rewrites the parameter buffers
@@ -790,10 +794,13 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
     to its output (``input_output_aliases``), so the weight gradient
     never leaves VMEM scratch and the parameters are rewritten in place.
 
-    hyp is the scalar-prefetched ``[lr, momentum]`` f32 pair; mom/mom_b
-    are fp32 accumulators (None → plain SGD).  Same grid, BlockSpecs and
-    default row tile as ``dw``, so the fp32 accumulation order matches
-    the two-pass path exactly (parity to fp32 round-off)."""
+    hyp is the scalar-prefetched ``[E, 2]`` f32 per-unit [lr, momentum]
+    table — the epilogue reads row ``e = program_id(0)``, so each junction
+    unit updates under its own hyperparameters (ops.py broadcasts a plain
+    (2,) pair to all units); mom/mom_b are fp32 accumulators (None →
+    plain SGD).  Same grid, BlockSpecs and default row tile as ``dw``, so
+    the fp32 accumulation order matches the two-pass path exactly (parity
+    to fp32 round-off)."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dy.shape[2] // nob
@@ -827,6 +834,7 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
             accw_ref, accb_ref = outs
         else:
             (accw_ref,) = outs
+        e = pl.program_id(0)
         m = pl.program_id(2)
 
         @pl.when(m == 0)
@@ -851,17 +859,17 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
 
         @pl.when(m == nm - 1)
         def _apply():
-            lr = hyp_ref[0]
+            lr = hyp_ref[e, 0]
             mv = accw_ref[...]
             if has_mom:
-                mv = hyp_ref[1] * mom_ref[0, 0] + mv
+                mv = hyp_ref[e, 1] * mom_ref[0, 0] + mv
                 new_mom_ref[0, 0] = mv
             new_w_ref[0, 0] = (w_ref[0, 0].astype(jnp.float32)
                                - lr * mv).astype(new_w_ref.dtype)
             if with_bias:
                 mbv = accb_ref[...]
                 if has_mom:
-                    mbv = hyp_ref[1] * mom_b_ref[...] + mbv
+                    mbv = hyp_ref[e, 1] * mom_b_ref[...] + mbv
                     new_mom_b_ref[...] = mbv
                 new_b_ref[...] = (b_ref[...].astype(jnp.float32)
                                   - lr * mbv).astype(new_b_ref.dtype)
@@ -930,7 +938,8 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
     into VMEM scratch exactly as in ``gated_dw`` and the flush epilogue
     applies the SGD(+momentum) update to BOTH weight streams in place —
     returns ``(new_wg, new_wi, new_mg, new_mi)`` (momenta None for plain
-    SGD), all aliased to their inputs."""
+    SGD), all aliased to their inputs.  hyp is the per-unit ``[E, 2]``
+    [lr, momentum] table, row ``e`` read in the epilogue."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dh.shape[2] // nob
@@ -955,6 +964,7 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
             new_mg_ref = outs.pop(0)
             new_mi_ref = outs.pop(0)
         accg_ref, accu_ref = outs
+        e = pl.program_id(0)
         m = pl.program_id(2)
 
         @pl.when(m == 0)
@@ -976,12 +986,12 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
 
         @pl.when(m == nm - 1)
         def _apply():
-            lr = hyp_ref[0]
+            lr = hyp_ref[e, 0]
             mgv = accg_ref[...]
             miv = accu_ref[...]
             if has_mom:
-                mgv = hyp_ref[1] * mg_ref[0, 0] + mgv
-                miv = hyp_ref[1] * mi_ref[0, 0] + miv
+                mgv = hyp_ref[e, 1] * mg_ref[0, 0] + mgv
+                miv = hyp_ref[e, 1] * mi_ref[0, 0] + miv
                 new_mg_ref[0, 0] = mgv
                 new_mi_ref[0, 0] = miv
             new_wg_ref[0, 0] = (wg_ref[0, 0].astype(jnp.float32)

@@ -156,10 +156,10 @@ def _junction_update_core(spec, x, ws, b, moms, mom_b, hyp, idx,
     parameter operands are the SGD(+momentum)-UPDATED values computed by
     the fused update_dw kernels (kernels/block_sparse_matmul.py) — the
     paper's concurrent BP+UP pipeline.  moms is a tuple mirroring ws
-    (empty for plain SGD), mom_b a 0/1-tuple, hyp the [lr, momentum] f32
-    pair.  The weight gradient never materializes in HBM: it lives in
-    VMEM scratch and is consumed by the in-kernel update, whose outputs
-    alias the parameter inputs."""
+    (empty for plain SGD), mom_b a 0/1-tuple, hyp the per-unit [E, 2]
+    f32 [lr, momentum] table.  The weight gradient never materializes in
+    HBM: it lives in VMEM scratch and is consumed by the in-kernel
+    update, whose outputs alias the parameter inputs."""
     y, _ = _fwd_call(spec, x, ws, b, idx, save=False)
     return y
 
@@ -291,9 +291,15 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
     treats these cotangents as the new parameters (train/steps.py);
     ``optim.fused_sgd`` adopts them and tree-maps the dense leaves.
 
-    hyp: ``[lr, momentum]`` as a (2,) f32 array (streamed through scalar
-    prefetch).  mom/mom_wi/mom_b: fp32 momentum accumulators matching
-    w/wi/bias (all None → plain SGD).  Requires ``w.dtype == x.dtype``:
+    hyp: ``[lr, momentum]`` as a (2,) f32 pair shared by every junction
+    unit, OR — for 5-D expert-batched weights — a per-unit ``[E, 2]``
+    table so each unit trains under its own hyperparameters in the same
+    launch (the population-search contract: E candidate networks sharing
+    one pattern, one kernel grid, E distinct learning rates).  Streamed
+    through scalar prefetch; the update epilogue reads row
+    ``program_id(0)``.  mom/mom_wi/mom_b: fp32 momentum accumulators
+    matching w/wi/bias (all None → plain SGD).  Requires
+    ``w.dtype == x.dtype``:
     the fused path must not cast weights (a cast would re-materialize
     them and its vjp would corrupt the updated-params contract).
     """
@@ -315,10 +321,15 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
                              f"(got {m.dtype}) — the momentum state stays "
                              "full-precision even for bf16 params")
     hyp = jnp.asarray(hyp, jnp.float32)
-    if hyp.shape != (2,):
-        raise ValueError(f"hyp must be the [lr, momentum] pair, got {hyp.shape}")
     single, lead, x3, w5, wi5, b2, E, M, nob, bs, bm, bn = _prep_junction(
         x, w, wi, bias, bm, bn, gated)
+    if hyp.shape == (2,):
+        # one shared pair -> every unit's row of the per-unit table
+        hyp = jnp.broadcast_to(hyp, (E, 2))
+    elif hyp.shape != (E, 2):
+        raise ValueError(
+            f"hyp must be the [lr, momentum] pair or a per-unit [E={E}, 2] "
+            f"table, got {hyp.shape}")
     b = jnp.zeros((E, nob * bs), x.dtype) if b2 is None else b2
     ws = (w5, wi5) if gated else (w5,)
     if mom is not None:

@@ -1,0 +1,109 @@
+"""Population-sweep driver: a density x lr grid on MNIST, end to end.
+
+    PYTHONPATH=src python -m repro.launch.sweep \
+        --densities 0.25,0.5 --lrs 0.02,0.05,0.1 --rounds 3 \
+        --steps-per-round 20 --out SWEEP_mnist.json
+
+Builds the candidate grid, buckets it into same-structure cohorts
+(candidates sharing a quantized fan-in train as ONE E-batched
+population), runs successive halving (search/scheduler.py), and writes
+the lineage ledger JSON — per-member config, loss curves, rounds
+survived, and the winning configuration.  ``--tag`` stamps the artifact
+meta exactly like ``benchmarks/run.py --tag`` stamps BENCH_*.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def _floats(s: str) -> list[float]:
+    return [float(v) for v in s.split(",") if v]
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--densities", default="0.25,0.5", metavar="D1,D2,...")
+    ap.add_argument("--lrs", default="0.02,0.05,0.1", metavar="L1,L2,...")
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--hidden", type=int, default=512)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--steps-per-round", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--samples", type=int, default=4096,
+                    help="train samples drawn from the MNIST epoch")
+    ap.add_argument("--eval-samples", type=int, default=512)
+    ap.add_argument("--engine", default="auto",
+                    help="pallas | jnp | auto (fused BP+UP on pallas)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tag", default="sweep",
+                    help="artifact meta tag (ledger meta.tag)")
+    ap.add_argument("--out", default="SWEEP_mnist.json")
+    return ap.parse_args()
+
+
+def main():
+    args = _parse()
+    import numpy as np
+
+    from repro.configs.base import SweepConfig
+    from repro.data.mnist import paper_dataset
+    from repro.search import CandidateSpec, bucket, run_sweep
+
+    # output width = smallest block multiple holding the 32 padded classes
+    out_w = -(-32 // args.block) * args.block
+    layers = (1024, args.hidden, out_w)
+    specs = [CandidateSpec(lr=lr, momentum=args.momentum, density=d,
+                           layers=layers, block=args.block,
+                           init_seed=i)
+             for i, (d, lr) in enumerate(
+                 (d, lr) for d in _floats(args.densities)
+                 for lr in _floats(args.lrs))]
+
+    n = args.samples + args.eval_samples
+    x, t, _ = paper_dataset(n=n, seed=args.seed)
+    x_train, t_train = x[:args.samples], t[:args.samples]
+    x_eval, t_eval = x[args.samples:], t[args.samples:]
+
+    cfg = SweepConfig(rounds=args.rounds,
+                      steps_per_round=args.steps_per_round,
+                      batch_size=args.batch,
+                      eval_samples=args.eval_samples,
+                      seed=args.seed, engine=args.engine)
+    n_cohorts = len(bucket(specs))
+    print(f"[sweep] {len(specs)} candidates in {n_cohorts} cohort(s), "
+          f"{cfg.rounds} rounds x {cfg.steps_per_round} steps, "
+          f"engine={cfg.engine}")
+    result = run_sweep(specs, x_train, t_train, x_eval, t_eval, cfg,
+                       tag=args.tag)
+    led = result.ledger
+    led.save(args.out)
+
+    for m in sorted(led.members, key=lambda m: (m.pruned_at is None,
+                                                m.rounds_survived)):
+        ev = f"{m.eval_losses[-1]:.5f}" if m.eval_losses else "-"
+        status = ("WINNER" if m.winner else
+                  "live" if m.pruned_at is None else
+                  f"pruned@r{m.pruned_at}")
+        print(f"[sweep]   member {m.member}: density="
+              f"{m.config['density']} lr={m.config['lr']} "
+              f"eval={ev} {status}")
+    w = led.winner()
+    if w is None:
+        import math
+        survived = [m for m in led.members
+                    if m.pruned_at is None and m.eval_losses]
+        if survived and all(not math.isfinite(m.eval_losses[-1])
+                            for m in survived):
+            raise SystemExit("[sweep] no winner: every surviving candidate "
+                             "diverged (non-finite eval loss) — lower the "
+                             "lr grid")
+        raise SystemExit("[sweep] no winner — sweep ran no rounds?")
+    print(f"[sweep] winner: density={w.config['density']} "
+          f"lr={w.config['lr']} eval_loss={w.eval_losses[-1]:.5f} "
+          f"-> {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Cohort bucketing: candidate list -> same-structure populations.
+
+The engine trains E candidates in one launch ONLY when they share every
+static input of the kernels — layer widths (array shapes), block size,
+pattern seed, activation, and the per-junction fan-in ``kb`` the density
+quantizes to (``core/sparsity.block_fan_in``).  ``bucket`` groups an
+arbitrary candidate list by exactly that ``structure_key``: each bucket
+is a *cohort*, one stacked population, one jitted E-batched train step.
+Hyperparameters (lr, momentum) and init seeds vary freely within a
+cohort — they ride the ``[E, 2]`` hyp table and the member axis, not the
+compile key.
+
+Bucketing rules (pinned by tests/test_search.py):
+
+* candidates whose densities round to the SAME kb at the same widths
+  land in one cohort — they are literally the same structure;
+* a different layer tuple, block size, pattern seed, activation, or a
+  density that rounds to a different kb splits the cohort;
+* candidate order is preserved: ``Cohort.member_ids[slot]`` maps a
+  population slot back to the caller's candidate index (the ledger's
+  lineage key).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.search.population import CandidateSpec, structure_key
+
+
+@dataclasses.dataclass(frozen=True)
+class Cohort:
+    """One same-structure bucket: specs[slot] / member_ids[slot] are the
+    population's slot-aligned candidate specs and original indices."""
+    key: tuple
+    specs: tuple[CandidateSpec, ...]
+    member_ids: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return len(self.specs)
+
+
+def bucket(specs: Sequence[CandidateSpec]) -> list[Cohort]:
+    """Group candidates into cohorts by structure_key, preserving first-
+    appearance order of cohorts and candidate order within each."""
+    groups: dict[tuple, list[int]] = {}
+    for i, s in enumerate(specs):
+        groups.setdefault(structure_key(s), []).append(i)
+    return [Cohort(key=k,
+                   specs=tuple(specs[i] for i in ids),
+                   member_ids=tuple(ids))
+            for k, ids in groups.items()]

@@ -1,0 +1,80 @@
+"""JSON results ledger for population sweeps: per-member lineage.
+
+One record per candidate: its full config, which cohort/slot it trained
+in, the per-step train-loss curve and per-round eval losses while live,
+how many rounds it survived, and whether it won.  ``Ledger.save`` writes
+a single stamped artifact (the sweep-side sibling of the BENCH_*.json
+schema — same ``meta.tag`` contract as ``benchmarks/run.py --tag``) that
+``Ledger.load`` round-trips, so sweep outcomes are machine-comparable
+across PRs like the perf trajectory is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.artifacts import artifact_meta
+
+
+def make_meta(tag: str = "") -> dict:
+    """The ONE artifact stamp (repro.artifacts) — identical schema to
+    BENCH_*.json meta, so sweep and bench artifacts are equally
+    commit-attributable."""
+    return artifact_meta(tag)
+
+
+@dataclasses.dataclass
+class MemberRecord:
+    member: int                 # caller-side candidate index
+    config: dict                # CandidateSpec.to_dict()
+    cohort: int                 # cohort index (bucket order)
+    slot: int                   # population slot within the cohort
+    loss_curve: list = dataclasses.field(default_factory=list)
+    eval_losses: list = dataclasses.field(default_factory=list)
+    rounds_survived: int = 0
+    pruned_at: Optional[int] = None   # round index, None = never pruned
+    winner: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Ledger:
+    def __init__(self, meta: dict | None = None,
+                 members: list[MemberRecord] | None = None):
+        self.meta = meta or {}
+        self.members = members or []
+
+    def add(self, record: MemberRecord) -> MemberRecord:
+        self.members.append(record)
+        return record
+
+    def winner(self) -> MemberRecord | None:
+        for m in self.members:
+            if m.winner:
+                return m
+        return None
+
+    def survivors(self) -> list[MemberRecord]:
+        return [m for m in self.members if m.pruned_at is None]
+
+    def to_dict(self) -> dict:
+        w = self.winner()
+        return {
+            "meta": self.meta,
+            "members": [m.to_dict() for m in self.members],
+            "winner": w.to_dict() if w is not None else None,
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Ledger":
+        with open(path) as f:
+            data = json.load(f)
+        members = [MemberRecord(**m) for m in data.get("members", [])]
+        return cls(meta=data.get("meta", {}), members=members)

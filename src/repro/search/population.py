@@ -1,0 +1,287 @@
+"""Population-parallel candidate training on the junction engine's E axis.
+
+A *population* is E candidate MLPs that share one network structure —
+the same layer widths, block size, pattern seed and per-junction fan-in
+(so the SAME scalar-prefetched block patterns) — stacked member-by-member
+into the engine's expert dimension: junction weights ``[E, nob, kb, bs,
+bs]``, biases ``[E, n_out]``, one pattern riding once in scalar prefetch
+for all members.  One fused E-batched train step then advances ALL E
+candidates: the forward/backward kernels iterate the expert grid axis,
+and the fused BP+UP epilogue reads each member's own ``[lr, momentum]``
+row from the per-unit ``[E, 2]`` hyp table — E distinct hyperparameter
+settings, one kernel launch per junction per pass.
+
+Because members never interact (the loss is a live-mask-weighted SUM of
+per-member losses and every parameter leaf is E-leading), training the
+population is mathematically identical to training E single models
+independently — the parity contract tests/test_search.py pins down.
+
+Batches are shared: x ``[M, n_in]`` is broadcast to ``[E, M, n_in]``, so
+every member sees the same data and differs only in init, structure
+cohort, and hyp row.  Pruning (search/scheduler.py) zeroes a member's
+mask entry AND its hyp row: masked loss makes its gradients exact zeros,
+lr = momentum = 0 freezes its parameters — fixed shapes, no recompiles,
+the serve-engine slot-masking pattern applied to training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear as sl
+from repro.core.sparsity import SparsityConfig, block_fan_in
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateSpec:
+    """One candidate network + its training hyperparameters.
+
+    (layers, block, seed, act, density-derived fan-ins) define the
+    *structure* — candidates agreeing on all of those share patterns and
+    can ride one population (search/cohorts.py buckets by exactly that
+    key); lr / momentum / init_seed vary freely WITHIN a population.
+    """
+    lr: float
+    momentum: float = 0.0
+    density: float = 0.25
+    layers: tuple[int, ...] = (1024, 512, 128)   # widths incl. in/out
+    block: int = 128
+    act: str = "sigmoid"       # every junction's epilogue (paper Sec. III)
+    seed: int = 0              # pattern seed (structure, not init)
+    init_seed: int = 0         # weight-init stream for this member
+
+    def fan_in_blocks(self) -> tuple[int, ...]:
+        """kb per junction at this density — the structure the density
+        quantizes to (core/sparsity.block_fan_in)."""
+        return tuple(block_fan_in(n_in // self.block, self.density)
+                     for n_in, _ in zip(self.layers[:-1], self.layers[1:]))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["layers"] = list(self.layers)   # JSON-canonical (round-trips)
+        return d
+
+
+def structure_key(spec: CandidateSpec) -> tuple:
+    """The shared-pattern cohort key: everything that shapes the stacked
+    arrays and scalar-prefetch patterns, nothing that doesn't."""
+    return (spec.layers, spec.block, spec.seed, spec.act,
+            spec.fan_in_blocks())
+
+
+def _init_member(key, spec: CandidateSpec):
+    """Single-model params for one candidate: a list of 4-D junction
+    dicts (one per layer pair), patterns deterministic in the spec."""
+    sp = SparsityConfig(density=spec.density, block=spec.block, where="all")
+    layers = []
+    for i, (n_in, n_out) in enumerate(zip(spec.layers[:-1], spec.layers[1:])):
+        key, sub = jax.random.split(key)
+        layers.append(sl.init_sparse(sub, n_in, n_out, sp, bias=True,
+                                     seed=spec.seed))
+    return layers
+
+
+def init_population(key, specs: Sequence[CandidateSpec]):
+    """Stack E candidates into population params: a list of junction
+    dicts with E-leading trainable leaves and SHARED pattern leaves.
+
+    Each member is initialized exactly as its standalone single model
+    would be (fold_in by init_seed) — ``member_slice`` recovers it
+    bit-for-bit, which is what makes population-vs-independent parity a
+    meaningful test rather than a tautology."""
+    if not specs:
+        raise ValueError("empty population")
+    key0 = structure_key(specs[0])
+    for s in specs[1:]:
+        if structure_key(s) != key0:
+            raise ValueError(
+                f"population members must share structure: {structure_key(s)} "
+                f"!= {key0} — bucket with search/cohorts.py first")
+    members = [_init_member(jax.random.fold_in(key, s.init_seed), s)
+               for s in specs]
+    pop = []
+    for li in range(len(members[0])):
+        layer = {k: members[0][li][k] for k in sl.PATTERN_LEAVES}
+        layer["w"] = jnp.stack([m[li]["w"] for m in members])
+        layer["b"] = jnp.stack([m[li]["b"] for m in members])
+        pop.append(layer)
+    return pop
+
+
+def member_slice(params, e: int):
+    """Member e's standalone single-model params (4-D junction dicts) —
+    the squeeze-path view of one population slot."""
+    return [{k: (v[e] if k in ("w", "b") else v) for k, v in layer.items()}
+            for layer in params]
+
+
+def population_size(params) -> int:
+    return params[0]["w"].shape[0]
+
+
+def hyp_table(specs: Sequence[CandidateSpec]) -> jax.Array:
+    """The per-member [E, 2] [lr, momentum] table the fused update
+    kernels index by expert grid coordinate."""
+    return jnp.asarray([[s.lr, s.momentum] for s in specs], jnp.float32)
+
+
+def init_momentum(params, specs: Sequence[CandidateSpec] | None = None):
+    """fp32 momentum accumulators mirroring the trainable leaves (zeros
+    for int pattern leaves, which the fused ctx injection skips).  When
+    ``specs`` is given and NO member uses momentum, returns None — the
+    steps then run the plain-SGD kernels, skipping a weight-sized fp32
+    read+write per junction per step (zeros-with-beta-0 computes the
+    same numbers, just slower)."""
+    if specs is not None and not any(s.momentum for s in specs):
+        return None
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32)
+        if jnp.issubdtype(p.dtype, jnp.inexact) else jnp.zeros((), jnp.float32),
+        params)
+
+
+# ------------------------------------------------------------------ forward
+def _apply_jnp(layer, x):
+    """E-batched junction reference: core/sparse_linear.apply_jnp (the
+    ONE gather+einsum reduction) vmapped over the member axis — trainable
+    leaves map per member, the shared pattern leaves broadcast
+    (x [E, M, n_in] -> [E, M, n_out], bias included, no activation)."""
+    in_axes = ({k: (0 if k in ("w", "b") else None) for k in layer}, 0)
+    return jax.vmap(sl.apply_jnp, in_axes=in_axes)(layer, x)
+
+
+def _layer_apply(layer, x, act: str, engine: str):
+    if engine == "pallas":
+        # sl.apply dispatches junction_matmul / junction_train_update
+        # (when the fused ctx rides in the dict) on the 5-D expert path
+        return sl.apply(layer, x, engine="pallas", act=act)
+    from repro.kernels import block_sparse_matmul as bsm
+    y = _apply_jnp(layer, x)
+    return bsm.act_fwd(y, act).astype(y.dtype) if act != "none" else y
+
+
+def population_forward(params, x, *, act: str, engine: str):
+    """y [E, M, n_out] for shared input x [M, n_in] (or pre-broadcast
+    [E, M, n_in]) through every junction of the stacked population."""
+    E = population_size(params)
+    if x.ndim == 2:
+        x = jnp.broadcast_to(x[None], (E, *x.shape))
+    for layer in params:
+        x = _layer_apply(layer, x, act, engine)
+    return x
+
+
+def member_losses(y, targets):
+    """Per-member mean-squared error [E] against the shared one-hot
+    targets [M, n_out] — the paper's output-MSE objective, one scalar per
+    candidate.  Members are independent, so d(sum_e mask_e*loss_e)/d w_e
+    = mask_e * d loss_e / d w_e: the population gradient IS the stacked
+    single-model gradients."""
+    t = targets[None].astype(y.dtype)
+    return jnp.mean(jnp.square(y - t), axis=(1, 2))
+
+
+# --------------------------------------------------------------- train step
+def _two_pass_update(params, mom, grads, hyp):
+    """Per-member SGD(+momentum) over the E-leading leaves: lr/beta come
+    from each member's hyp row, broadcast over the trailing dims — the
+    materialized-gradient reference of the fused in-kernel epilogue."""
+    def _row(col, p):
+        return hyp[:, col].reshape((-1,) + (1,) * (p.ndim - 1))
+
+    def mv_fn(p, m, g):
+        if not jnp.issubdtype(p.dtype, jnp.inexact):
+            return m
+        gf = g.astype(jnp.float32)
+        return _row(1, p) * m + gf if mom is not None else gf
+
+    def p_fn(p, m):
+        if not jnp.issubdtype(p.dtype, jnp.inexact):
+            return p
+        return (p.astype(jnp.float32) - _row(0, p) * m).astype(p.dtype)
+
+    mv = jax.tree.map(mv_fn, params, mom if mom is not None else params,
+                      grads)
+    new_params = jax.tree.map(p_fn, params, mv)
+    return new_params, (mv if mom is not None else None)
+
+
+def _merge_updated(grads, params, mom):
+    """Fused-step merge: the cotangents of the augmented tree's junction
+    leaves ARE the updated params / momenta (every population leaf is a
+    junction leaf — no dense remainder to tree-map).  mom None = plain
+    SGD, no momentum leaves to adopt."""
+    new_params, new_mom = [], []
+    for li, (g, p) in enumerate(zip(grads, params)):
+        layer = dict(p)
+        mlayer = dict(mom[li]) if mom is not None else None
+        for k, mk in sl.FUSED_MOM.items():
+            if k in p and not isinstance(p[k], dict):
+                layer[k] = g[k]
+                if mom is not None:
+                    mlayer[k] = g[mk]
+        new_params.append(layer)
+        new_mom.append(mlayer)
+    return new_params, (new_mom if mom is not None else None)
+
+
+def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
+                         fused: bool = True, jit: bool = True,
+                         donate: bool = True):
+    """step(params, mom, hyp, mask, x, t) -> (params, mom, losses[E]).
+
+    One call trains ALL E members on the shared batch (x [M, n_in],
+    t [M, n_out] one-hot): objective sum(mask * member_losses).  On the
+    pallas engine with ``fused`` the junction custom_vjp applies each
+    member's update in the backward kernels against its own hyp row (dw
+    never in HBM); otherwise the two-pass reference materializes grads
+    and applies the identical per-member formula here.  mom None = plain
+    SGD end to end (no momentum buffers allocated or streamed; the step
+    then also returns None).  hyp [E, 2] and mask [E] are traced
+    operands — pruning a member (zero mask + zero hyp row) never
+    recompiles."""
+    engine = sl.resolve_engine(engine)
+    use_fused = fused and engine == "pallas"
+
+    def step(params, mom, hyp, mask, x, t):
+        if use_fused:
+            aug = sl.inject_update_ctx(params, mom, hyp)
+
+            def loss_fn(aug):
+                y = population_forward(aug, x, act=act, engine=engine)
+                losses = member_losses(y, t)
+                return jnp.sum(losses * mask), losses
+
+            grads, losses = jax.grad(loss_fn, has_aux=True,
+                                     allow_int=True)(aug)
+            new_params, new_mom = _merge_updated(grads, params, mom)
+            return new_params, new_mom, losses
+
+        def loss_fn(params):
+            y = population_forward(params, x, act=act, engine=engine)
+            losses = member_losses(y, t)
+            return jnp.sum(losses * mask), losses
+
+        grads, losses = jax.grad(loss_fn, has_aux=True, allow_int=True)(params)
+        new_params, new_mom = _two_pass_update(params, mom, grads, hyp)
+        return new_params, new_mom, losses
+
+    if jit:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    return step
+
+
+def make_population_eval(act: str = "sigmoid", *, engine: str = "auto",
+                         jit: bool = True):
+    """eval(params, x, t) -> per-member losses [E] (no update, no mask —
+    the scheduler ranks live members and ignores pruned slots)."""
+    engine = sl.resolve_engine(engine)
+
+    def evaluate(params, x, t):
+        y = population_forward(params, x, act=act, engine=engine)
+        return member_losses(y, t)
+
+    return jax.jit(evaluate) if jit else evaluate

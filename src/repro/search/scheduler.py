@@ -1,0 +1,208 @@
+"""Successive-halving scheduler over E-batched population cohorts.
+
+``run_sweep`` takes an arbitrary candidate list, buckets it into
+same-structure cohorts (search/cohorts.py), stacks each cohort into one
+population (search/population.py), and runs ``SweepConfig.rounds`` of
+
+    train steps_per_round E-batched steps
+      -> vectorized per-member eval loss on the held-out split
+      -> rank ALL live members globally, keep the top keep_fraction,
+         prune the rest
+
+Cross-cohort ranking is width-normalized: cohorts can differ in output
+width (zero-padded targets), and a per-element MSE mean would dilute
+with padding — so members rank on the per-sample TOTAL squared error
+(``loss * n_out``), and a non-finite eval loss (a diverged candidate)
+ranks as +inf: diverged members are pruned first and can never be named
+winner.
+
+Pruning is in place and shape-stable: a pruned member's mask entry goes
+to 0 (its loss drops out of the objective, so its gradients are exact
+zeros) and its hyp row goes to [0, 0] (lr = momentum = 0, so the fused
+epilogue rewrites w' = w and mom' = 0 — parameters frozen).  The arrays
+the jitted step sees never change shape, so a sweep compiles each cohort
+step exactly once — the serve engine's finished-slot masking applied to
+training, and the paper's "greater exploration ... on-chip" claim as a
+subsystem: exploration cost scales with rounds, not candidates.
+
+The returned ``SweepResult`` carries the lineage ``Ledger`` (winner,
+loss curves, rounds survived) plus the live cohort states for callers
+that want the winning weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SweepConfig
+from repro.search import cohorts as ch
+from repro.search import population as pop
+from repro.search.ledger import Ledger, MemberRecord, make_meta
+
+
+@dataclasses.dataclass
+class CohortState:
+    cohort: ch.Cohort
+    params: list
+    mom: list
+    hyp: jax.Array          # [E, 2], zeroed rows = pruned
+    mask: jax.Array         # [E] f32, 0 = pruned
+    records: list[MemberRecord]
+    step: callable
+    evaluate: callable
+    t_train_pad: jax.Array  # train targets padded to this cohort's width
+    t_eval_pad: jax.Array   # eval targets, ditto (constant per cohort)
+
+    @property
+    def out_width(self) -> int:
+        return self.cohort.specs[0].layers[-1]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    ledger: Ledger
+    states: list[CohortState]
+
+    def winning_params(self):
+        """The winner's standalone single-model params."""
+        w = self.ledger.winner()
+        if w is None:
+            return None
+        st = self.states[w.cohort]
+        return pop.member_slice(st.params, w.slot)
+
+
+def _pad_targets(t: np.ndarray, width: int) -> np.ndarray:
+    """One-hot targets padded with zero columns to a cohort's output
+    width (the paper pads 10 MNIST classes to its 32-wide output)."""
+    if t.shape[1] > width:
+        raise ValueError(f"targets wider ({t.shape[1]}) than the output "
+                         f"layer ({width})")
+    if t.shape[1] == width:
+        return t
+    out = np.zeros((t.shape[0], width), t.dtype)
+    out[:, :t.shape[1]] = t
+    return out
+
+
+def _batch_indices(n: int, batch: int, step: int) -> np.ndarray:
+    """Deterministic wrapping minibatch of the shared train split —
+    every cohort sees the same data stream."""
+    start = (step * batch) % n
+    return (np.arange(start, start + batch) % n).astype(np.int64)
+
+
+def _score(loss: float, out_width: int) -> float:
+    """Cross-cohort comparable rank key: per-sample total squared error
+    (mean * width undoes the padding dilution of wider outputs); any
+    non-finite loss — a diverged candidate — ranks strictly last."""
+    s = float(loss) * out_width
+    return s if math.isfinite(s) else math.inf
+
+
+def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
+              x_eval, t_eval, cfg: SweepConfig, *,
+              tag: str = "") -> SweepResult:
+    """Train all candidates population-parallel and successively halve.
+
+    x_* [N, n_in] float, t_* [N, n_classes] one-hot (padded per cohort to
+    its output width).  Returns the lineage ledger (winner marked) and
+    the final cohort states."""
+    specs = list(specs)
+    x_train = np.asarray(x_train, np.float32)
+    t_train = np.asarray(t_train, np.float32)
+    x_eval = np.asarray(x_eval, np.float32)[:cfg.eval_samples]
+    t_eval = np.asarray(t_eval, np.float32)[:cfg.eval_samples]
+
+    ledger = Ledger(meta=dict(make_meta(tag), engine=cfg.engine,
+                              rounds=cfg.rounds,
+                              steps_per_round=cfg.steps_per_round,
+                              n_candidates=len(specs)))
+    key = jax.random.PRNGKey(cfg.seed)
+    x_train_d = jnp.asarray(x_train)
+    x_eval_d = jnp.asarray(x_eval)
+    states: list[CohortState] = []
+    for ci, cohort in enumerate(ch.bucket(specs)):
+        spec0 = cohort.specs[0]
+        if x_train.shape[1] != spec0.layers[0]:
+            raise ValueError(
+                f"cohort {ci}: input width {spec0.layers[0]} != data "
+                f"width {x_train.shape[1]}")
+        params = pop.init_population(jax.random.fold_in(key, ci),
+                                     cohort.specs)
+        records = [ledger.add(MemberRecord(
+            member=mid, config=s.to_dict(), cohort=ci, slot=slot))
+            for slot, (mid, s) in enumerate(zip(cohort.member_ids,
+                                                cohort.specs))]
+        states.append(CohortState(
+            cohort=cohort, params=params,
+            mom=pop.init_momentum(params, cohort.specs),
+            hyp=pop.hyp_table(cohort.specs),
+            mask=jnp.ones((cohort.size,), jnp.float32),
+            records=records,
+            step=pop.make_population_step(spec0.act, engine=cfg.engine,
+                                          fused=cfg.fused),
+            evaluate=pop.make_population_eval(spec0.act,
+                                              engine=cfg.engine),
+            # targets are constant per cohort: pad + upload once, slice
+            # per minibatch on device
+            t_train_pad=jnp.asarray(_pad_targets(t_train, spec0.layers[-1])),
+            t_eval_pad=jnp.asarray(_pad_targets(t_eval, spec0.layers[-1]))))
+
+    n_train = x_train.shape[0]
+    global_step = 0
+    n_live = len(specs)
+    for rnd in range(cfg.rounds):
+        # -- train: steps_per_round E-batched steps per cohort, shared data
+        for _ in range(cfg.steps_per_round):
+            bi = jnp.asarray(_batch_indices(
+                n_train, min(cfg.batch_size, n_train), global_step))
+            xb = jnp.take(x_train_d, bi, axis=0)
+            for st in states:
+                if not any(r.pruned_at is None for r in st.records):
+                    continue        # whole cohort pruned: steps are no-ops
+                st.params, st.mom, losses = st.step(
+                    st.params, st.mom, st.hyp, st.mask, xb,
+                    jnp.take(st.t_train_pad, bi, axis=0))
+                for rec, loss in zip(st.records, np.asarray(losses)):
+                    if rec.pruned_at is None:
+                        rec.loss_curve.append(float(loss))
+            global_step += 1
+
+        # -- eval: vectorized per-member loss, live members only ranked
+        scored = []      # (width-normalized score, cohort_idx, slot)
+        for ci, st in enumerate(states):
+            if not any(r.pruned_at is None for r in st.records):
+                continue
+            ev = np.asarray(st.evaluate(st.params, x_eval_d, st.t_eval_pad))
+            for rec, loss in zip(st.records, ev):
+                if rec.pruned_at is None:
+                    rec.eval_losses.append(float(loss))
+                    rec.rounds_survived = rnd + 1
+                    scored.append((_score(loss, st.out_width), ci, rec.slot))
+
+        # -- halve: keep the globally best keep_fraction, zero the rest
+        if rnd < cfg.rounds - 1 and len(scored) > 1:
+            scored.sort()
+            n_keep = max(1, int(math.ceil(len(scored) * cfg.keep_fraction)))
+            for _, ci, slot in scored[n_keep:]:
+                st = states[ci]
+                st.mask = st.mask.at[slot].set(0.0)
+                st.hyp = st.hyp.at[slot].set(0.0)
+                st.records[slot].pruned_at = rnd
+            n_live = n_keep
+
+    # -- winner: best width-normalized final eval score among survivors
+    best = min(((_score(m.eval_losses[-1], st.out_width), m.member)
+                for st in states for m in st.records
+                if m.pruned_at is None and m.eval_losses), default=None)
+    if best is not None and math.isfinite(best[0]):
+        for m in ledger.members:
+            m.winner = m.member == best[1]
+    ledger.meta["live_at_end"] = n_live
+    return SweepResult(ledger=ledger, states=states)

@@ -7,7 +7,9 @@ exactly on TPU backends; serving decodes through the kernels; density()
 no longer host-syncs or under-reports; MoE expert FFNs run through the
 expert-batched kernels (ISSUE 2) with routing/capacity semantics
 identical to the reference loop; plus regression tests for the serving
-PRNG-reuse, cache-growth-heuristic and bench --only silent-no-op fixes.
+PRNG-reuse, cache-growth-heuristic and bench --only silent-no-op fixes,
+serve edge cases (early-EOS slot masking stays shape-stable, seeded
+temperature sampling is deterministic), and the bench --tag meta stamp.
 """
 import dataclasses
 import sys
@@ -273,6 +275,67 @@ def test_grow_cache_places_by_metadata():
     jax.tree.map(check_state, M.cache_seq_axes(cfg2), grown2, src2)
 
 
+def test_eos_slot_masking_keeps_decode_shape_stable():
+    """Early EOS must not change ANY shape: a finished slot keeps
+    decoding into scratch and is masked to eos, the step-locked loop
+    runs all max_new_tokens ticks, and unfinished slots are unaffected
+    (the fixed-shape serving contract the population scheduler borrows
+    its slot masking from)."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = _sparse_cfg(engine="jnp")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(5), (3, 8), 0, cfg.vocab))
+    n_new = 6
+    free = Engine(cfg, params, ServeConfig(max_new_tokens=n_new)).generate(
+        prompts)
+    # force an early stop: sequence 0's second token becomes the EOS
+    eos = int(free[0, 1])
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=n_new,
+                                          eos_token=eos))
+    calls = []
+    orig = eng._decode
+
+    def spy(params, cache, tok, pos):
+        calls.append(tuple(tok.shape))
+        return orig(params, cache, tok, pos)
+
+    eng._decode = spy
+    tok = eng.generate(prompts)
+    assert tok.shape == (3, n_new)                  # output shape stable
+    assert len(calls) == n_new - 1                  # no early loop exit
+    assert all(s == (3, 1) for s in calls)          # per-tick shape stable
+    for b in range(3):
+        row = tok[b]
+        hits = np.flatnonzero(row == eos)
+        if hits.size:                               # after first eos: all eos
+            np.testing.assert_array_equal(row[hits[0]:], eos)
+        # up to (and including) each row's first eos, greedy decode is
+        # unchanged by the masking
+        stop = hits[0] + 1 if hits.size else n_new
+        np.testing.assert_array_equal(row[:stop], free[b, :stop])
+
+
+def test_temperature_sampling_deterministic_under_seed():
+    """temperature > 0 sampling is a pure function of the seed: same
+    seed -> identical tokens across fresh Engine instances, different
+    seed -> a different draw."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = _sparse_cfg(engine="jnp")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0, cfg.vocab))
+
+    def gen(seed):
+        scfg = ServeConfig(max_new_tokens=8, temperature=1.0, seed=seed)
+        return Engine(cfg, params, scfg).generate(prompts)
+
+    np.testing.assert_array_equal(gen(3), gen(3))
+    assert not np.array_equal(gen(3), gen(4))
+
+
 def test_bench_only_unknown_name_exits_nonzero(monkeypatch, tmp_path):
     """benchmarks/run.py --only with a typo'd name must exit nonzero and
     write no artifact (it used to print the CSV header, run nothing,
@@ -287,6 +350,33 @@ def test_bench_only_unknown_name_exits_nonzero(monkeypatch, tmp_path):
         br.main()
     assert ei.value.code not in (0, None)
     assert not art.exists()
+
+
+def test_bench_tag_threads_into_artifact_meta(monkeypatch, tmp_path):
+    """--tag must land in the artifact's meta and round-trip through
+    load_artifact; without --tag the filename-derived tag is kept (the
+    stamp contract the sweep ledger shares)."""
+    monkeypatch.syspath_prepend(str(Path(__file__).resolve().parents[1]))
+    import benchmarks.engine_benches as eb
+    import benchmarks.run as br
+
+    monkeypatch.setattr(
+        eb, "bench",
+        lambda fast=True: [{"name": "engine.stub", "us_per_call": 1.0,
+                            "derived": "stub"}])
+    art = tmp_path / "BENCH_fromfile.json"
+    monkeypatch.setattr(sys, "argv", ["run", "--only", "engine",
+                                      "--json", str(art), "--tag", "pr5"])
+    br.main()
+    meta, results = br.load_artifact(str(art))
+    assert meta["tag"] == "pr5"
+    assert results == {"engine.stub": 1.0}
+    # no --tag: derived from the BENCH_<tag>.json filename
+    monkeypatch.setattr(sys, "argv", ["run", "--only", "engine",
+                                      "--json", str(art)])
+    br.main()
+    meta, _ = br.load_artifact(str(art))
+    assert meta["tag"] == "fromfile"
 
 
 def test_density_static_and_exact():
