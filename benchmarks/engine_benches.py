@@ -23,6 +23,11 @@ fused BP+UP path (update applied in the backward kernels' epilogue,
 params donated through input_output_aliasing — the dw HBM round-trip the
 fused path exists to delete).
 
+``bench.guard.overhead`` (ISSUE 6) times the fused MNIST update cycle
+with the in-kernel [E] divergence-flag output (the guardian's detector)
+against the plain fused cycle; the row's ``derived`` field carries the
+with/without ratio.
+
 ``bench.sweep.mnist.*`` rows (ISSUE 5) time the population engine: one
 E-batched population train step (E MNIST candidates with distinct
 learning rates advancing in single kernel launches via the [E, 2] hyp
@@ -85,11 +90,13 @@ def _time_fwd_bwd(params, x, engine, n=3):
 _UPDATE_LR, _UPDATE_BETA = 1e-3, 0.9
 
 
-def _time_junction_update(params, x, mode, n=3):
+def _time_junction_update(params, x, mode, n=3, with_health=False):
     """One full junction train step — fwd + bwd + SGD-momentum update.
     mode "jnp": two-pass reference (dw materialized, update tree-mapped);
     mode "pallas": fused BP+UP (ops.junction_train_update, dw consumed by
-    the in-kernel update, params/momenta aliased in place)."""
+    the in-kernel update, params/momenta aliased in place).  with_health
+    additionally rides the [E] divergence-flag output through the update
+    kernels' flush epilogue (the guardian's in-kernel detector)."""
     from repro.kernels import ops as kops
 
     hyp = jnp.asarray([_UPDATE_LR, _UPDATE_BETA], jnp.float32)
@@ -98,7 +105,17 @@ def _time_junction_update(params, x, mode, n=3):
     mom = jnp.zeros(params["w"].shape, jnp.float32)
     mom_b = jnp.zeros(params["b"].shape, jnp.float32)
 
-    if mode == "pallas":
+    if mode == "pallas" and with_health:
+        h0 = jnp.zeros((1,), jnp.float32)
+
+        @jax.jit
+        def step(w, b, mom, mom_b, x):
+            def loss(w, b, m, mb, h):
+                return jnp.sum(kops.junction_train_update(
+                    x, w, *pat, bias=b, act="sigmoid", hyp=hyp,
+                    mom=m, mom_b=mb, health=h))
+            return jax.grad(loss, (0, 1, 2, 3, 4))(w, b, mom, mom_b, h0)
+    elif mode == "pallas":
         @jax.jit
         def step(w, b, mom, mom_b, x):
             def loss(w, b, m, mb):
@@ -252,6 +269,21 @@ def bench(fast=True):
                        f"sgd-momentum {'fused' if engine == 'pallas' else 'two-pass'} "
                        f"mode={mode}",
         })
+    # divergence-guard overhead (ISSUE 6): the fused MNIST update cycle
+    # with the in-kernel [E] health output riding the flush epilogue vs
+    # without — the cost of always-on non-finite detection
+    dt_plain = _time_junction_update(up_params, xu, "pallas", n=3)
+    dt_guard = _time_junction_update(up_params, xu, "pallas", n=3,
+                                     with_health=True)
+    mode = "compiled" if on_tpu else "interpret"
+    rows.append({
+        "name": "bench.guard.overhead",
+        "us_per_call": dt_guard * 1e6,
+        "derived": f"M={Mu} {n_in}->{n_out} d={density} bs={block} "
+                   f"fused+health vs fused "
+                   f"ratio={dt_guard / max(dt_plain, 1e-12):.3f} "
+                   f"mode={mode}",
+    })
     # ... and the full sparse-expert MoE layer through inject/merge
     for engine in ("jnp", "pallas"):
         dt = _time_moe_update(moe_params, x, engine, n=3)

@@ -52,6 +52,33 @@ print(f"[ci] sweep winner: density={w['config']['density']} "
       f"({pruned}/{len(led['members'])} pruned)")
 PY
 
+echo "== fault injection (guardian, crash recovery, quarantine smoke) =="
+# the divergence-guardian + crash-shaped checkpoint tests, run as their
+# own stage so a fault-tolerance regression is named even when someone
+# trims the tier-1 run above
+python -m pytest -x -q tests/test_guardian.py tests/test_checkpoint.py
+# sweep smoke with a deliberately diverging member (lr=inf): the ledger
+# must show it quarantined mid-round while a finite winner is still named
+python -m repro.launch.sweep --densities 0.25 --lrs 0.05,0.2,inf \
+  --rounds 2 --steps-per-round 2 --batch 32 --samples 256 --eval-samples 64 \
+  --block 32 --hidden 128 --engine jnp --tag "${TAG}-fault" \
+  --out "SWEEP_${TAG}_fault.json"
+python - "SWEEP_${TAG}_fault.json" <<'PY'
+import json, math, sys
+led = json.load(open(sys.argv[1]))
+q = [m for m in led["members"] if m.get("quarantined_at") is not None]
+if not q:
+    sys.exit(f"[ci] {sys.argv[1]}: diverge-seeded sweep quarantined nobody")
+w = led.get("winner")
+if not (w and math.isfinite(w["eval_losses"][-1])):
+    sys.exit(f"[ci] {sys.argv[1]}: no finite winner despite quarantine")
+if any(m["member"] == w["member"] for m in q):
+    sys.exit(f"[ci] {sys.argv[1]}: quarantined member named winner")
+print(f"[ci] fault smoke: member(s) {[m['member'] for m in q]} quarantined "
+      f"at {q[0]['quarantined_at']}, winner lr={w['config']['lr']} "
+      f"eval_loss={w['eval_losses'][-1]:.4f}")
+PY
+
 echo "== fast benches (engine incl. MoE + fused-update rows, sweep, roofline) =="
 python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json" \
   --tag "$TAG"

@@ -247,6 +247,11 @@ class SweepConfig:
     batch_size / eval_samples: shared-data minibatch and held-out sizes.
     engine: "pallas" | "jnp" | "auto" (resolved once at step build);
         fused applies only on the pallas engine.
+    quarantine: trip-wire fault isolation: a member whose loss or
+        in-kernel health flag goes non-finite is masked + hyp-zeroed
+        MID-round (the prune mechanism applied immediately) and recorded
+        in the ledger, so sweeping lr×density into the divergent regime
+        cannot poison the rest of the cohort's run.
     """
     rounds: int = 3
     steps_per_round: int = 20
@@ -256,6 +261,7 @@ class SweepConfig:
     seed: int = 0
     engine: str = "auto"
     fused: bool = True
+    quarantine: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,6 +60,15 @@ MOE_PATTERN_LEAVES = ("idx_in", "idx_out",
 UPDATE_HYP_LEAF = "upd_hyp"
 FUSED_MOM = {"w": "mom_w", "b": "mom_b",
              "wi": "mom_wi", "wg": "mom_wg", "wo": "mom_wo"}
+# Divergence-detector leaves: dummy f32 [..., E] zeros injected alongside
+# upd_hyp; their cotangents carry the update kernels' per-unit non-finite
+# counts (kernels/block_sparse_matmul.py with_health contract).  A single
+# junction carries "upd_health" (E=1); a MoE expert-FFN dict carries one
+# per fused junction (in/out).  train/steps.py sums them into
+# metrics["nonfinite"].
+UPDATE_HEALTH_LEAF = "upd_health"
+MOE_HEALTH_LEAVES = ("upd_health_in", "upd_health_out")
+HEALTH_LEAVES = (UPDATE_HEALTH_LEAF,) + MOE_HEALTH_LEAVES
 
 
 def is_junction(p) -> bool:
@@ -75,8 +84,10 @@ def inject_update_ctx(params, mom, hyp):
     from the mirrored ``mom`` tree (None → plain SGD, no mom leaves).
     ``hyp`` is the shared (2,) [lr, momentum] pair or — for E-batched
     population junctions — a per-unit [E, 2] table; either shape rides
-    through to ``junction_train_update`` unchanged.  Dense leaves ride
-    through untouched — the optimizer tree-maps them."""
+    through to ``junction_train_update`` unchanged.  Every junction also
+    gets its dummy health leaf(s) (zeros, shape stack + (E,)) so the
+    in-kernel divergence flags come back as their cotangents.  Dense
+    leaves ride through untouched — the optimizer tree-maps them."""
     def rec(p, m):
         if isinstance(p, dict):
             out = {}
@@ -90,6 +101,13 @@ def inject_update_ctx(params, mom, hyp):
                 stack = idx.shape[:-2]   # leading layer-scan dims
                 out[UPDATE_HYP_LEAF] = jnp.broadcast_to(
                     hyp, stack + tuple(jnp.shape(hyp)))
+                wl = p["w"] if "w" in p else p["wg"]
+                E = (wl.shape[len(stack)]
+                     if wl.ndim - len(stack) == 5 else 1)
+                zeros = jnp.zeros(stack + (E,), jnp.float32)
+                for hk in (MOE_HEALTH_LEAVES if "idx_in" in p
+                           else (UPDATE_HEALTH_LEAF,)):
+                    out[hk] = zeros
                 if m is not None:
                     for k, mk in FUSED_MOM.items():
                         if k in p and not isinstance(p[k], dict):
@@ -215,7 +233,8 @@ def apply(params: Params, x: jax.Array, *, engine: str = "auto",
                 x, params["w"], params["idx"], params["rev_ob"],
                 params["rev_t"], params["rev_cnt"], bias=params.get("b"),
                 act=act, hyp=params[UPDATE_HYP_LEAF],
-                mom=params.get("mom_w"), mom_b=params.get("mom_b"))
+                mom=params.get("mom_w"), mom_b=params.get("mom_b"),
+                health=params.get(UPDATE_HEALTH_LEAF))
         return ops.junction_matmul(
             x, params["w"], params["idx"], params["rev_ob"], params["rev_t"],
             params["rev_cnt"], bias=params.get("b"), act=act)

@@ -72,6 +72,22 @@ ONE block pattern that rides once in scalar prefetch — the paper's
   and each (e, ob) tile is read and written exactly once (the M loop is
   innermost), so no grid step can observe a partially-updated tile.
   Momentum accumulators are fp32 even for bf16 params.
+
+  With ``with_health=True`` the update kernels additionally emit a tiny
+  **non-aliased** ``[E, 1]`` int32 health output — the in-kernel
+  divergence detector.  Because the in-place update means a non-finite
+  ``dw`` silently destroys the parameter state (there is no HBM gradient
+  to inspect downstream), the flush epilogue OR-reduces ``isfinite``
+  over each post-momentum update tile (both branches for the gated
+  kernel, plus the bias update for biased layers) and accumulates a
+  per-unit count of bad (e, ob) tiles: ``health[e] > 0`` ⇔ unit e wrote
+  at least one non-finite parameter tile this step.  The slot is a
+  single revisited ``(1, 1)`` block per unit (zeroed at the first
+  (ob, m) step, written only at flushes) — one VMEM compare per tile,
+  no gradient materialization, and the parameter outputs' aliasing
+  contract is untouched.  ``ops.junction_train_update`` surfaces it as
+  the cotangent of a dummy ``[E]`` health operand; ``train/steps.py``
+  aggregates it into ``metrics["nonfinite"]``.
 * **gated_{fwd,dx,dw}** — the GShard/SwiGLU gate
   ``silu(x @ Wg) * (x @ Wi)`` fused into single passes: both fan-in
   reductions accumulate side by side in VMEM scratch in the forward, and
@@ -786,13 +802,14 @@ N_SCALAR_PREFETCH_UPDATE = 2    # (idx, hyp) — alias indices count these
 
 def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
               with_bias: bool = True, bm: int | None = None,
-              interpret: bool = False):
+              with_health: bool = False, interpret: bool = False):
     """The fused UP stage: the ``dw`` gradient reduction with the SGD
     (+momentum) update applied in the flush epilogue — returns
-    ``(new_w, new_b, new_mom, new_mom_b)`` (None where the operand is
-    absent) instead of ``(dw, db)``, with every parameter operand aliased
-    to its output (``input_output_aliases``), so the weight gradient
-    never leaves VMEM scratch and the parameters are rewritten in place.
+    ``(new_w, new_b, new_mom, new_mom_b, health)`` (None where the
+    operand is absent) instead of ``(dw, db)``, with every parameter
+    operand aliased to its output (``input_output_aliases``), so the
+    weight gradient never leaves VMEM scratch and the parameters are
+    rewritten in place.
 
     hyp is the scalar-prefetched ``[E, 2]`` f32 per-unit [lr, momentum]
     table — the epilogue reads row ``e = program_id(0)``, so each junction
@@ -800,7 +817,16 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
     (2,) pair to all units); mom/mom_b are fp32 accumulators (None →
     plain SGD).  Same grid, BlockSpecs and default row tile as ``dw``, so
     the fp32 accumulation order matches the two-pass path exactly (parity
-    to fp32 round-off)."""
+    to fp32 round-off).
+
+    ``with_health=True`` adds a tiny non-aliased ``[E, 1]`` int32 output
+    riding the same flush: each (e, ob) epilogue OR-reduces
+    ``isfinite`` over the post-momentum update tile (and the bias
+    update for biased layers) and accumulates one count into unit e's
+    slot — the in-kernel divergence detector (one VMEM compare per
+    tile; the gradient still never materializes in HBM).  health[e] > 0
+    means unit e wrote at least one non-finite parameter tile this
+    step."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dy.shape[2] // nob
@@ -830,11 +856,13 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
         new_mom_ref = outs.pop(0) if has_mom else None
         new_b_ref = outs.pop(0) if with_bias else None
         new_mom_b_ref = outs.pop(0) if (has_mom and with_bias) else None
+        health_ref = outs.pop(0) if with_health else None
         if with_bias:
             accw_ref, accb_ref = outs
         else:
             (accw_ref,) = outs
         e = pl.program_id(0)
+        o = pl.program_id(1)
         m = pl.program_id(2)
 
         @pl.when(m == 0)
@@ -842,6 +870,12 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
             accw_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
             if with_bias:
                 accb_ref[...] = jnp.zeros((1, bs), jnp.float32)
+
+        if with_health:
+            # health slot e is revisited across every (o, m) step: init once
+            @pl.when(jnp.logical_and(o == 0, m == 0))
+            def _zero_health():
+                health_ref[0, 0] = 0
 
         if has_res:
             grad = act_bwd(res_ref[0].astype(jnp.float32), act)
@@ -866,6 +900,7 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
                 new_mom_ref[0, 0] = mv
             new_w_ref[0, 0] = (w_ref[0, 0].astype(jnp.float32)
                                - lr * mv).astype(new_w_ref.dtype)
+            ok = jnp.all(jnp.isfinite(mv)) if with_health else None
             if with_bias:
                 mbv = accb_ref[...]
                 if has_mom:
@@ -873,6 +908,10 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
                     new_mom_b_ref[...] = mbv
                 new_b_ref[...] = (b_ref[...].astype(jnp.float32)
                                   - lr * mbv).astype(new_b_ref.dtype)
+                if with_health:
+                    ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(mbv)))
+            if with_health:
+                health_ref[0, 0] += jnp.where(ok, 0, 1).astype(jnp.int32)
 
     in_specs = [pl.BlockSpec((1, bm, bs), lambda e, o, m, *_: (e, m, o))]
     inputs = [dy]
@@ -906,6 +945,11 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
         alias_io(b, bspec)
         if has_mom:
             alias_io(mom_b, bspec)
+    if with_health:
+        # non-aliased [E, 1] detector output: one slot per unit, revisited
+        # across every (ob, m) step of that unit
+        out_specs.append(pl.BlockSpec((1, 1), lambda e, o, m, *_: (e, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((E, 1), jnp.int32))
 
     scratch = [pltpu.VMEM((kb, bs, bs), jnp.float32)]
     if with_bias:
@@ -929,17 +973,22 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
     new_mom = outs.pop(0) if has_mom else None
     new_b = outs.pop(0) if with_bias else None
     new_mom_b = outs.pop(0) if (has_mom and with_bias) else None
-    return new_w, new_b, new_mom, new_mom_b
+    health = outs.pop(0) if with_health else None
+    return new_w, new_b, new_mom, new_mom_b, health
 
 
 def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
-                    bm: int | None = None, interpret: bool = False):
+                    bm: int | None = None, with_health: bool = False,
+                    interpret: bool = False):
     """Fused BP+UP for the gated junction: both branch gradients reduce
     into VMEM scratch exactly as in ``gated_dw`` and the flush epilogue
     applies the SGD(+momentum) update to BOTH weight streams in place —
-    returns ``(new_wg, new_wi, new_mg, new_mi)`` (momenta None for plain
-    SGD), all aliased to their inputs.  hyp is the per-unit ``[E, 2]``
-    [lr, momentum] table, row ``e`` read in the epilogue."""
+    returns ``(new_wg, new_wi, new_mg, new_mi, health)`` (momenta None
+    for plain SGD), all parameter outputs aliased to their inputs.  hyp
+    is the per-unit ``[E, 2]`` [lr, momentum] table, row ``e`` read in
+    the epilogue.  ``with_health=True`` appends the non-aliased ``[E, 1]``
+    int32 divergence detector (see ``update_dw``): the epilogue checks
+    BOTH branch update tiles for non-finites."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dh.shape[2] // nob
@@ -963,14 +1012,21 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
         if has_mom:
             new_mg_ref = outs.pop(0)
             new_mi_ref = outs.pop(0)
+        health_ref = outs.pop(0) if with_health else None
         accg_ref, accu_ref = outs
         e = pl.program_id(0)
+        o = pl.program_id(1)
         m = pl.program_id(2)
 
         @pl.when(m == 0)
         def _zero():
             accg_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
             accu_ref[...] = jnp.zeros((kb, bs, bs), jnp.float32)
+
+        if with_health:
+            @pl.when(jnp.logical_and(o == 0, m == 0))
+            def _zero_health():
+                health_ref[0, 0] = 0
 
         dhb = dh_ref[0].astype(jnp.float32)
         gb = g_ref[0].astype(jnp.float32)
@@ -998,6 +1054,10 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
                                 - lr * mgv).astype(new_wg_ref.dtype)
             new_wi_ref[0, 0] = (wi_ref[0, 0].astype(jnp.float32)
                                 - lr * miv).astype(new_wi_ref.dtype)
+            if with_health:
+                ok = jnp.logical_and(jnp.all(jnp.isfinite(mgv)),
+                                     jnp.all(jnp.isfinite(miv)))
+                health_ref[0, 0] += jnp.where(ok, 0, 1).astype(jnp.int32)
 
     row = pl.BlockSpec((1, bm, bs), lambda e, o, m, *_: (e, m, o))
     in_specs = [row, row, row]
@@ -1023,6 +1083,9 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
     if has_mom:
         alias_io(mg)
         alias_io(mi)
+    if with_health:
+        out_specs.append(pl.BlockSpec((1, 1), lambda e, o, m, *_: (e, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((E, 1), jnp.int32))
 
     outs = pl.pallas_call(
         fused_update_gated_dw,
@@ -1038,6 +1101,10 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
         input_output_aliases=aliases,
         interpret=interpret,
     )(idx, hyp, *inputs)
-    if has_mom:
-        return outs[0], outs[1], outs[2], outs[3]
-    return outs[0], outs[1], None, None
+    outs = list(outs)
+    new_wg = outs.pop(0)
+    new_wi = outs.pop(0)
+    new_mg = outs.pop(0) if has_mom else None
+    new_mi = outs.pop(0) if has_mom else None
+    health = outs.pop(0) if with_health else None
+    return new_wg, new_wi, new_mg, new_mi, health

@@ -86,6 +86,7 @@ class KernelSpec(NamedTuple):
     bn: int             # output-bundle tile
     has_bias: bool
     interpret: bool
+    with_health: bool = False   # fused update emits the [E] divergence flags
 
 
 def _fwd_call(spec, x, ws, b, idx, save: bool):
@@ -150,7 +151,7 @@ _junction_core.defvjp(_junction_fwd, _junction_bwd)
 
 # ------------------------------------------------- fused BP+UP custom_vjp
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _junction_update_core(spec, x, ws, b, moms, mom_b, hyp, idx,
+def _junction_update_core(spec, x, ws, b, moms, mom_b, hyp, health, idx,
                           rev_ob, rev_t, rev_cnt):
     """Forward identical to _junction_core; the vjp's cotangents for the
     parameter operands are the SGD(+momentum)-UPDATED values computed by
@@ -159,12 +160,19 @@ def _junction_update_core(spec, x, ws, b, moms, mom_b, hyp, idx,
     (empty for plain SGD), mom_b a 0/1-tuple, hyp the per-unit [E, 2]
     f32 [lr, momentum] table.  The weight gradient never materializes in
     HBM: it lives in VMEM scratch and is consumed by the in-kernel
-    update, whose outputs alias the parameter inputs."""
+    update, whose outputs alias the parameter inputs.
+
+    ``health`` is a dummy f32 [E] operand riding the same cotangent
+    channel: when ``spec.with_health`` the update kernels' non-aliased
+    [E, 1] int32 divergence flags come back as its cotangent (count of
+    non-finite update tiles per unit), so the in-kernel detector
+    surfaces through an ordinary jax.grad without materializing any
+    gradient — the forward ignores the operand entirely."""
     y, _ = _fwd_call(spec, x, ws, b, idx, save=False)
     return y
 
 
-def _junction_update_fwd(spec, x, ws, b, moms, mom_b, hyp, idx,
+def _junction_update_fwd(spec, x, ws, b, moms, mom_b, hyp, health, idx,
                          rev_ob, rev_t, rev_cnt):
     y, res = _fwd_call(spec, x, ws, b, idx, save=True)
     return y, (x, ws, b, res, moms, mom_b, hyp, idx, rev_ob, rev_t, rev_cnt)
@@ -175,27 +183,29 @@ def _junction_update_bwd(spec, saved, dy):
     dxv = _dx_call(spec, ws, res, dy, rev_ob, rev_t, rev_cnt)
     if spec.gated:
         g, u = res
-        nwg, nwi, nmg, nmi = bsm.update_gated_dw(
+        nwg, nwi, nmg, nmi, flags = bsm.update_gated_dw(
             x, dy, idx, g, u, ws[0], ws[1],
             moms[0] if moms else None, moms[1] if moms else None,
-            hyp, interpret=spec.interpret)
+            hyp, with_health=spec.with_health, interpret=spec.interpret)
         new_ws = (nwg, nwi)
         new_moms = (nmg, nmi) if moms else ()
         new_b = jnp.zeros_like(b)    # gated junctions carry no bias
         new_mom_b = ()
     else:
-        nw, nb, nm, nmb = bsm.update_dw(
+        nw, nb, nm, nmb, flags = bsm.update_dw(
             x, dy, idx, res, ws[0], b if spec.has_bias else None,
             moms[0] if moms else None,
             mom_b[0] if mom_b else None,
             hyp, act=spec.act, with_bias=spec.has_bias,
-            interpret=spec.interpret)
+            with_health=spec.with_health, interpret=spec.interpret)
         new_ws = (nw,)
         new_moms = (nm,) if moms else ()
         new_b = nb if spec.has_bias else jnp.zeros_like(b)
         new_mom_b = (nmb,) if mom_b else ()
+    d_health = (flags.reshape(spec.E).astype(jnp.float32)
+                if spec.with_health else jnp.zeros((spec.E,), jnp.float32))
     return (dxv, new_ws, new_b, new_moms, new_mom_b, jnp.zeros_like(hyp),
-            None, None, None, None)
+            d_health, None, None, None, None)
 
 
 _junction_update_core.defvjp(_junction_update_fwd, _junction_update_bwd)
@@ -272,7 +282,7 @@ def _pad_junction_rows(x, bm):
 
 def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
                           wi=None, bias=None, act: str = "none",
-                          mom=None, mom_wi=None, mom_b=None,
+                          mom=None, mom_wi=None, mom_b=None, health=None,
                           interpret: bool | None = None,
                           bm: int | None = None, bn: int | None = None):
     """The fused BP+UP junction — forward y = act(x @ W_sparse + bias)
@@ -298,8 +308,16 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
     one pattern, one kernel grid, E distinct learning rates).  Streamed
     through scalar prefetch; the update epilogue reads row
     ``program_id(0)``.  mom/mom_wi/mom_b: fp32 momentum accumulators
-    matching w/wi/bias (all None → plain SGD).  Requires
-    ``w.dtype == x.dtype``:
+    matching w/wi/bias (all None → plain SGD).
+
+    health: optional f32 zeros of shape ``(E,)`` (``(1,)`` for a single
+    4-D junction) switching on the in-kernel divergence detector — the
+    operand's *cotangent* under jax.grad is the kernels' per-unit count
+    of non-finite update tiles (``> 0`` ⇔ that unit's parameters were
+    just destroyed by a non-finite dw).  The forward never reads it; the
+    two-pass path has materialized grads to inspect, so the flag only
+    exists on this fused path where the gradient otherwise vanishes into
+    VMEM.  Requires ``w.dtype == x.dtype``:
     the fused path must not cast weights (a cast would re-materialize
     them and its vjp would corrupt the updated-params contract).
     """
@@ -339,9 +357,19 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
             (mom_b[None] if single else mom_b),)
     else:
         moms, mom_b_t = (), ()
+    with_health = health is not None
+    if with_health:
+        health = jnp.asarray(health, jnp.float32).reshape(-1)
+        if health.shape != (E,):
+            raise ValueError(
+                f"health must be ({E},) f32 zeros (one slot per junction "
+                f"unit), got shape {health.shape}")
+    else:
+        health = jnp.zeros((E,), jnp.float32)
     spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
-                      has_bias=bias is not None, interpret=interpret)
-    y = _junction_update_core(spec, x3, ws, b, moms, mom_b_t, hyp,
+                      has_bias=bias is not None, interpret=interpret,
+                      with_health=with_health)
+    y = _junction_update_core(spec, x3, ws, b, moms, mom_b_t, hyp, health,
                               idx, rev_ob, rev_t, rev_cnt)
     y = y[:, :M]
     return y.reshape(*lead, nob * bs) if single else y

@@ -84,6 +84,8 @@ def main():
         ev = f"{m.eval_losses[-1]:.5f}" if m.eval_losses else "-"
         status = ("WINNER" if m.winner else
                   "live" if m.pruned_at is None else
+                  f"quarantined@r{m.quarantined_at['round']}"
+                  if m.quarantined_at is not None else
                   f"pruned@r{m.pruned_at}")
         print(f"[sweep]   member {m.member}: density="
               f"{m.config['density']} lr={m.config['lr']} "

@@ -135,11 +135,13 @@ def _expert_ffn_pallas(p: Params, xd, E: int):
         h = ops.junction_train_update(
             xe, p["wg"], p["idx_in"],
             p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"], wi=p["wi"],
-            hyp=hyp, mom=p.get("mom_wg"), mom_wi=p.get("mom_wi"))
+            hyp=hyp, mom=p.get("mom_wg"), mom_wi=p.get("mom_wi"),
+            health=p.get("upd_health_in"))
         ye = ops.junction_train_update(
             h, p["wo"], p["idx_out"],
             p["rev_out_ob"], p["rev_out_t"], p["rev_out_cnt"],
-            hyp=hyp, mom=p.get("mom_wo"))
+            hyp=hyp, mom=p.get("mom_wo"),
+            health=p.get("upd_health_out"))
         return jnp.moveaxis(ye.reshape(E, G, C, -1), 0, 1)
     h = ops.junction_matmul(
         xe, p["wg"], p["idx_in"],

@@ -76,14 +76,20 @@ class FusedSGD(Optimizer):
         lr = jnp.asarray(self.lr_fn(step), jnp.float32)
         return jnp.stack([lr, jnp.asarray(self.momentum, jnp.float32)])
 
-    def merge(self, grads, state, params, step):
+    def merge(self, grads, state, params, step, lr_scale=None):
         """Fused-step merge: ``grads`` is the cotangent tree of the
         *augmented* params (core/sparse_linear.inject_update_ctx) — its
-        junction weight/momentum leaves already ARE the updated values;
-        every other trainable leaf still carries a real gradient and gets
-        the same two-pass formula applied here."""
+        junction weight/momentum leaves already ARE the updated values
+        (and its injected health leaves, absent from ``params``, are
+        skipped by construction); every other trainable leaf still
+        carries a real gradient and gets the same two-pass formula
+        applied here.  ``lr_scale`` (guardian backoff) must match the
+        factor already folded into the injected hyp table so dense and
+        junction leaves back off together."""
         from repro.core import sparse_linear as sl
         lr = self.lr_fn(step)
+        if lr_scale is not None:
+            lr = lr * lr_scale
         mom = state["mom"] if self.momentum else None
 
         def dense(p, g, m):

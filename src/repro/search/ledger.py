@@ -34,6 +34,11 @@ class MemberRecord:
     eval_losses: list = dataclasses.field(default_factory=list)
     rounds_survived: int = 0
     pruned_at: Optional[int] = None   # round index, None = never pruned
+    # {"round": r, "step": global_step} when the scheduler quarantined the
+    # member MID-round for diverging (non-finite loss / in-kernel health
+    # flag) — fault isolation, distinct from rank-based pruning (which
+    # only happens at round boundaries and leaves pruned_at alone)
+    quarantined_at: Optional[dict] = None
     winner: bool = False
 
     def to_dict(self) -> dict:

@@ -228,10 +228,34 @@ def _merge_updated(grads, params, mom):
     return new_params, (new_mom if mom is not None else None)
 
 
+def _member_health_fused(grads) -> jax.Array:
+    """[E] per-member non-finite-update counts from the injected health
+    leaves' cotangents (the update kernels' in-kernel detector) — summed
+    across layers."""
+    h = None
+    for g in grads:
+        v = g[sl.UPDATE_HEALTH_LEAF].astype(jnp.float32)
+        h = v if h is None else h + v
+    return h
+
+
+def _member_health_jnp(grads) -> jax.Array:
+    """[E] two-pass twin: per-member any-non-finite flags over the
+    materialized E-leading gradient leaves (one count per bad leaf)."""
+    h = None
+    for g in grads:
+        for k in ("w", "b"):
+            f = jnp.any(~jnp.isfinite(g[k].reshape(g[k].shape[0], -1)),
+                        axis=1).astype(jnp.float32)
+            h = f if h is None else h + f
+    return h
+
+
 def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
                          fused: bool = True, jit: bool = True,
-                         donate: bool = True):
-    """step(params, mom, hyp, mask, x, t) -> (params, mom, losses[E]).
+                         donate: bool = True, with_health: bool = False):
+    """step(params, mom, hyp, mask, x, t) -> (params, mom, losses[E])
+    — or (params, mom, losses, health[E]) with ``with_health``.
 
     One call trains ALL E members on the shared batch (x [M, n_in],
     t [M, n_out] one-hot): objective sum(mask * member_losses).  On the
@@ -242,7 +266,14 @@ def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
     SGD end to end (no momentum buffers allocated or streamed; the step
     then also returns None).  hyp [E, 2] and mask [E] are traced
     operands — pruning a member (zero mask + zero hyp row) never
-    recompiles."""
+    recompiles.
+
+    ``with_health`` adds the per-member divergence signal the scheduler's
+    quarantine uses: health[e] > 0 ⇔ member e's update just went
+    non-finite.  Fused path: the in-kernel [E] health flags (the grads
+    never exist in HBM to inspect); two-pass path: a non-finite scan over
+    the materialized per-member grads.  Member independence means a bad
+    member flags ONLY its own slot."""
     engine = sl.resolve_engine(engine)
     use_fused = fused and engine == "pallas"
 
@@ -258,6 +289,8 @@ def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
             grads, losses = jax.grad(loss_fn, has_aux=True,
                                      allow_int=True)(aug)
             new_params, new_mom = _merge_updated(grads, params, mom)
+            if with_health:
+                return new_params, new_mom, losses, _member_health_fused(grads)
             return new_params, new_mom, losses
 
         def loss_fn(params):
@@ -267,6 +300,8 @@ def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
 
         grads, losses = jax.grad(loss_fn, has_aux=True, allow_int=True)(params)
         new_params, new_mom = _two_pass_update(params, mom, grads, hyp)
+        if with_health:
+            return new_params, new_mom, losses, _member_health_jnp(grads)
         return new_params, new_mom, losses
 
     if jit:

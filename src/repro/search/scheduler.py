@@ -25,6 +25,19 @@ step exactly once — the serve engine's finished-slot masking applied to
 training, and the paper's "greater exploration ... on-chip" claim as a
 subsystem: exploration cost scales with rounds, not candidates.
 
+The same mechanism doubles as FAULT ISOLATION (``SweepConfig.quarantine``,
+on by default): exploring lr×density means routinely training members at
+hyperparameters that diverge, and a diverged member's non-finite loss
+would otherwise sit inside the cohort's shared-batch objective every
+step.  After every train step the scheduler checks each live member's
+loss and per-member health flag (population.make_population_step
+``with_health`` — the fused path's in-kernel detector, since those
+gradients never reach HBM) and quarantines diverged members MID-round:
+mask + hyp zeroed immediately, the event recorded in the ledger
+(``quarantined_at``).  Member independence makes this exact: survivors'
+gradient trajectories are bitwise identical to a cohort that never
+contained the diverged member (tests/test_guardian.py).
+
 The returned ``SweepResult`` carries the lineage ``Ledger`` (winner,
 loss curves, rounds survived) plus the live cohort states for callers
 that want the winning weights.
@@ -105,6 +118,22 @@ def _score(loss: float, out_width: int) -> float:
     return s if math.isfinite(s) else math.inf
 
 
+def _quarantine(st: CohortState, rec: MemberRecord, rnd: int,
+                global_step: int):
+    """Fault-isolate a diverged member MID-round: zero its mask entry
+    (its — possibly non-finite — loss drops out of the shared-batch
+    objective, and member independence makes the surviving members'
+    gradients exactly what they'd be without it) and its hyp row (lr =
+    momentum = 0 freezes whatever parameter state remains).  The same
+    in-place mechanism as round-boundary pruning, applied the moment the
+    divergence is detected rather than at the next eval; recorded
+    distinctly in the ledger."""
+    st.mask = st.mask.at[rec.slot].set(0.0)
+    st.hyp = st.hyp.at[rec.slot].set(0.0)
+    rec.pruned_at = rnd
+    rec.quarantined_at = {"round": rnd, "step": global_step}
+
+
 def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
               x_eval, t_eval, cfg: SweepConfig, *,
               tag: str = "") -> SweepResult:
@@ -146,7 +175,8 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
             mask=jnp.ones((cohort.size,), jnp.float32),
             records=records,
             step=pop.make_population_step(spec0.act, engine=cfg.engine,
-                                          fused=cfg.fused),
+                                          fused=cfg.fused,
+                                          with_health=cfg.quarantine),
             evaluate=pop.make_population_eval(spec0.act,
                                               engine=cfg.engine),
             # targets are constant per cohort: pad + upload once, slice
@@ -166,12 +196,22 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
             for st in states:
                 if not any(r.pruned_at is None for r in st.records):
                     continue        # whole cohort pruned: steps are no-ops
-                st.params, st.mom, losses = st.step(
+                out = st.step(
                     st.params, st.mom, st.hyp, st.mask, xb,
                     jnp.take(st.t_train_pad, bi, axis=0))
+                if cfg.quarantine:
+                    st.params, st.mom, losses, health = out
+                    health = np.asarray(health)
+                else:
+                    st.params, st.mom, losses = out
+                    health = None
                 for rec, loss in zip(st.records, np.asarray(losses)):
                     if rec.pruned_at is None:
                         rec.loss_curve.append(float(loss))
+                        if cfg.quarantine and (
+                                not math.isfinite(float(loss))
+                                or health[rec.slot] > 0):
+                            _quarantine(st, rec, rnd, global_step)
             global_step += 1
 
         # -- eval: vectorized per-member loss, live members only ranked
@@ -205,4 +245,6 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
         for m in ledger.members:
             m.winner = m.member == best[1]
     ledger.meta["live_at_end"] = n_live
+    ledger.meta["quarantined"] = sum(
+        1 for m in ledger.members if m.quarantined_at is not None)
     return SweepResult(ledger=ledger, states=states)

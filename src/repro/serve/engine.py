@@ -31,6 +31,12 @@ class ServeConfig:
     # "auto"); None keeps the ArchConfig's setting.  The step builders
     # resolve "auto" to the Pallas engine on TPU backends.
     engine: str | None = None
+    # divergence guard: a slot whose logits go non-finite (corrupted
+    # weights, poisoned cache) is terminated — EOS-filled and masked out
+    # like a finished sequence — instead of sampling garbage into the
+    # batch (categorical over NaN logits returns arbitrary token ids and
+    # argmax propagates index 0 silently).  Other slots are untouched.
+    guard_nonfinite: bool = True
 
 
 class Engine:
@@ -42,12 +48,23 @@ class Engine:
         self.params = params
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        # slots terminated by the non-finite-logit guard in the LAST
+        # generate() call (host int, refreshed per call)
+        self.nonfinite_terminated = 0
 
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    @staticmethod
+    def _guard(logits2d):
+        """(bad [B] bool, sanitized logits): a slot with ANY non-finite
+        logit is flagged and its row zeroed so sampling stays defined."""
+        bad = jnp.any(~jnp.isfinite(logits2d), axis=-1)
+        safe = jnp.where(bad[:, None], jnp.zeros_like(logits2d), logits2d)
+        return bad, safe
 
     def generate(self, prompts: np.ndarray, extra_inputs: dict | None = None):
         """prompts [B, S_prompt] int32 (right-aligned, padded with 0).
@@ -64,19 +81,38 @@ class Engine:
         # never consumed (sampling the first token with `key` and then
         # splitting the same `key` reused it — correlated samples)
         key, sub = jax.random.split(jax.random.PRNGKey(self.scfg.seed))
-        tok = self._sample(logits[:, -1], sub)[:, None]
+        guard = self.scfg.guard_nonfinite
+        # terminated slots are filled with eos (or 0 when eos is unset —
+        # the guard must still be able to mask a slot out)
+        fill = self.scfg.eos_token if self.scfg.eos_token >= 0 else 0
+        nf_slots = jnp.zeros((B,), bool)
+        step_logits = logits[:, -1]
+        if guard:
+            bad, step_logits = self._guard(step_logits)
+            nf_slots = nf_slots | bad
+        tok = self._sample(step_logits, sub)[:, None]
+        if guard:
+            tok = jnp.where(nf_slots[:, None], fill, tok)
         out = [tok]
-        done = jnp.zeros((B,), bool)
+        done = nf_slots if guard else jnp.zeros((B,), bool)
         for i in range(self.scfg.max_new_tokens - 1):
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, cache, tok,
                                          jnp.asarray(S + i, jnp.int32))
-            nxt = self._sample(logits[:, -1], sub)[:, None]
+            step_logits = logits[:, -1]
+            if guard:
+                bad, step_logits = self._guard(step_logits)
+                nf_slots = nf_slots | bad
+                done = done | bad
+            nxt = self._sample(step_logits, sub)[:, None]
             if self.scfg.eos_token >= 0:
                 done = done | (tok[:, 0] == self.scfg.eos_token)
-                nxt = jnp.where(done[:, None], self.scfg.eos_token, nxt)
+            if self.scfg.eos_token >= 0 or guard:
+                nxt = jnp.where(done[:, None], fill, nxt)
             tok = nxt
             out.append(tok)
+        if guard:
+            self.nonfinite_terminated = int(np.asarray(nf_slots).sum())
         return np.asarray(jnp.concatenate(out, axis=1))
 
     def _grow_cache(self, cache, B, total, S):

@@ -1,8 +1,17 @@
 """Fault-tolerant checkpointing (no orbax in this environment).
 
 Guarantees targeted at thousand-node operation:
-  * **atomic** — write to <dir>.tmp-<rand>, fsync, rename; a crash mid-save
-    never corrupts the latest checkpoint.
+  * **atomic + durable** — write to <dir>.tmp-<rand>, fsync arrays.npz
+    AND manifest.json, rename, fsync the parent directory; a crash at any
+    point never corrupts the latest checkpoint.
+  * **fallback restore** — ``restore_latest`` verifies each candidate
+    (checksum; ``full_checksum=True`` at save time digests every byte,
+    head-MiB per leaf otherwise) and falls back past unreadable
+    checkpoints to the newest verifiable one.
+  * **healthy promotion + retention** — ``mark_healthy`` flags rollback
+    targets (the guardian promotes only checkpoints that survived a
+    health window); ``gc_checkpoints(keep_last_k)`` bounds disk while
+    never deleting the latest healthy mark.
   * **mesh-agnostic / elastic** — leaves are saved as full host arrays
     (gathered); restore re-places onto *any* mesh/sharding, so the job can
     come back on a different device count (elastic scaling test:
@@ -63,18 +72,43 @@ def _from_native(a: np.ndarray, dtype_str: str) -> np.ndarray:
     return np.frombuffer(a.tobytes(), want).reshape(a.shape[:-1])
 
 
-def _checksum(arrays: list[np.ndarray]) -> str:
+def _checksum(arrays: list[np.ndarray], full: bool = False) -> str:
     h = hashlib.sha256()
     for a in arrays:
         h.update(str(a.shape).encode())
         h.update(str(a.dtype).encode())
-        h.update(a.tobytes()[:1 << 20])   # first MiB per leaf — fast + strong
+        # head mode hashes the first MiB per leaf (fast); full=True hashes
+        # every byte — tail corruption in large weight leaves is invisible
+        # to the head digest
+        h.update(a.tobytes() if full else a.tobytes()[:1 << 20])
     return h.hexdigest()[:16]
 
 
+def _fsync_dir(path: str | Path):
+    """Best-effort directory fsync — makes the rename itself durable, not
+    just the file contents (a crash after rename but before the metadata
+    flush could otherwise lose the whole entry)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str | Path, step: int, tree: Any,
-         extra: dict | None = None) -> Path:
-    """Atomic synchronous save of an arbitrary pytree."""
+         extra: dict | None = None, full_checksum: bool = False) -> Path:
+    """Atomic synchronous save of an arbitrary pytree.  Durability order:
+    arrays.npz is fsynced, then the fsynced manifest (the completeness
+    sentinel), then the rename into place, then the parent directory —
+    a crash at any point leaves either the old state or a complete new
+    checkpoint, never a torn one.  ``full_checksum=True`` digests every
+    byte of every leaf (slower; head-of-leaf MiB otherwise) — recorded
+    in the manifest so restore verifies in the same mode."""
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     arrays, treedef = _flatten(tree)
@@ -82,14 +116,17 @@ def save(ckpt_dir: str | Path, step: int, tree: Any,
     final = ckpt_dir / f"step_{step:010d}"
     tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_{step}_"))
     try:
-        np.savez(tmp / "arrays.npz",
-                 **{f"leaf_{i}": a for i, a in enumerate(natives)})
+        with open(tmp / "arrays.npz", "wb") as f:
+            np.savez(f, **{f"leaf_{i}": a for i, a in enumerate(natives)})
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
             "step": step,
             "n_leaves": len(arrays),
             "dtypes": list(dtypes),
             "treedef": str(treedef),
-            "checksum": _checksum(list(natives)),
+            "checksum": _checksum(list(natives), full=full_checksum),
+            "checksum_mode": "full" if full_checksum else "head",
             "extra": extra or {},
         }
         with open(tmp / _SENTINEL, "w") as f:
@@ -99,6 +136,7 @@ def save(ckpt_dir: str | Path, step: int, tree: Any,
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(ckpt_dir)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -115,13 +153,14 @@ class AsyncSaver:
         self.last_path: Path | None = None
         self.error: BaseException | None = None
 
-    def save(self, ckpt_dir, step, tree, extra=None):
+    def save(self, ckpt_dir, step, tree, extra=None, full_checksum=False):
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)   # device->host now
 
         def _run():
             try:
-                self.last_path = save(ckpt_dir, step, host_tree, extra)
+                self.last_path = save(ckpt_dir, step, host_tree, extra,
+                                      full_checksum=full_checksum)
             except BaseException as e:  # surfaced on wait()
                 self.error = e
 
@@ -137,10 +176,12 @@ class AsyncSaver:
             raise err
 
 
-def latest_step(ckpt_dir: str | Path) -> int | None:
+def complete_steps(ckpt_dir: str | Path) -> list[int]:
+    """Ascending steps of every COMPLETE checkpoint (manifest present —
+    partial .tmp dirs and manifest-less crash leftovers are skipped)."""
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
-        return None
+        return []
     steps = []
     for d in ckpt_dir.iterdir():
         if d.name.startswith("step_") and (d / _SENTINEL).exists():
@@ -148,7 +189,63 @@ def latest_step(ckpt_dir: str | Path) -> int | None:
                 steps.append(int(d.name.split("_")[1]))
             except ValueError:
                 continue
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    steps = complete_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+# ------------------------------------------------- healthy-promotion marks
+_HEALTHY = "HEALTHY"
+
+
+def mark_healthy(ckpt_dir: str | Path, step: int):
+    """Promote a checkpoint to rollback-eligible.  The guardian
+    (train/train_loop.py) promotes a checkpoint only after it has
+    SURVIVED a health window of further training — a checkpoint written
+    moments before (or after) silent corruption must never become a
+    rollback target."""
+    d = Path(ckpt_dir) / f"step_{step:010d}"
+    with open(d / _HEALTHY, "w") as f:
+        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(d)
+
+
+def is_healthy(ckpt_dir: str | Path, step: int) -> bool:
+    return (Path(ckpt_dir) / f"step_{step:010d}" / _HEALTHY).exists()
+
+
+def latest_healthy_step(ckpt_dir: str | Path) -> int | None:
+    healthy = [s for s in complete_steps(ckpt_dir) if is_healthy(ckpt_dir, s)]
+    return healthy[-1] if healthy else None
+
+
+def gc_checkpoints(ckpt_dir: str | Path, keep_last_k: int,
+                   log=None) -> list[int]:
+    """Retention GC: delete complete checkpoints beyond the newest
+    ``keep_last_k``, but NEVER the latest healthy-marked one — the
+    guardian's rollback floor must survive any retention policy.
+    Returns the deleted steps."""
+    steps = complete_steps(ckpt_dir)
+    if keep_last_k is None or len(steps) <= keep_last_k:
+        return []
+    protect = set(steps[-keep_last_k:])
+    h = latest_healthy_step(ckpt_dir)
+    if h is not None:
+        protect.add(h)
+    removed = []
+    for s in steps:
+        if s in protect:
+            continue
+        shutil.rmtree(Path(ckpt_dir) / f"step_{s:010d}", ignore_errors=True)
+        removed.append(s)
+    if removed and log:
+        log(f"[ckpt] gc removed steps {removed} (keep_last_k={keep_last_k})")
+    return removed
 
 
 def restore(ckpt_dir: str | Path, step: int, like: Any,
@@ -160,7 +257,9 @@ def restore(ckpt_dir: str | Path, step: int, like: Any,
     manifest = json.loads((d / _SENTINEL).read_text())
     data = np.load(d / "arrays.npz")
     natives = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
-    if verify and _checksum(natives) != manifest["checksum"]:
+    # pre-checksum_mode manifests were always head-digested
+    full = manifest.get("checksum_mode", "head") == "full"
+    if verify and _checksum(natives, full=full) != manifest["checksum"]:
         raise IOError(f"checkpoint {d} failed checksum verification")
     arrays = [_from_native(a, dt)
               for a, dt in zip(natives, manifest["dtypes"])]
@@ -174,9 +273,21 @@ def restore(ckpt_dir: str | Path, step: int, like: Any,
     return jax.tree.unflatten(treedef, arrays), manifest["extra"]
 
 
-def restore_latest(ckpt_dir, like, shardings=None):
-    s = latest_step(ckpt_dir)
-    if s is None:
-        return None, None, None
-    tree, extra = restore(ckpt_dir, s, like, shardings)
-    return s, tree, extra
+def restore_latest(ckpt_dir, like, shardings=None, log=None):
+    """(step, tree, extra) from the newest VERIFIABLE checkpoint.
+
+    A corrupted / checksum-failing / truncated latest checkpoint no
+    longer kills auto-resume: each candidate is verified on load and an
+    unreadable one falls back to the next-newest complete checkpoint
+    (logged through ``log``), so one torn write costs at most
+    ``ckpt_every`` steps of progress.  (None, None, None) when nothing
+    restorable exists."""
+    for s in reversed(complete_steps(ckpt_dir)):
+        try:
+            tree, extra = restore(ckpt_dir, s, like, shardings)
+            return s, tree, extra
+        except Exception as e:   # torn npz, bad json, failed checksum, ...
+            if log:
+                log(f"[ckpt] step {s} unreadable ({type(e).__name__}: {e}) "
+                    "— falling back to an older checkpoint")
+    return None, None, None

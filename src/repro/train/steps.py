@@ -62,6 +62,57 @@ def fused_update_eligible(cfg: ArchConfig, optimizer: Optimizer,
     return True, "fused"
 
 
+def collect_junction_health(grads) -> jax.Array:
+    """Sum the injected health leaves' cotangents out of a fused step's
+    grads tree — each is the update kernels' per-unit count of non-finite
+    parameter tiles (kernels/block_sparse_matmul.py with_health contract).
+    Returns a f32 scalar; > 0 ⇔ at least one junction unit just wrote
+    non-finite parameters in-place."""
+    total = jnp.zeros((), jnp.float32)
+
+    def rec(t):
+        nonlocal total
+        if isinstance(t, dict):
+            for k, v in t.items():
+                if k in sl.HEALTH_LEAVES and not isinstance(v, dict):
+                    total = total + jnp.sum(v.astype(jnp.float32))
+                elif isinstance(v, (dict, list, tuple)):
+                    rec(v)
+        elif isinstance(t, (list, tuple)):
+            for v in t:
+                rec(v)
+
+    rec(grads)
+    return total
+
+
+def count_nonfinite_grads(grads) -> jax.Array:
+    """Two-pass detector: number of trainable gradient leaves carrying any
+    non-finite value.  The materialized-gradient twin of the fused path's
+    in-kernel health flags — same metrics["nonfinite"] contract, > 0 ⇔
+    this update would poison the parameters."""
+    total = jnp.zeros((), jnp.float32)
+    for g in jax.tree.leaves(grads):
+        if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.inexact):
+            total = total + jnp.any(~jnp.isfinite(g)).astype(jnp.float32)
+    return total
+
+
+def scale_params_delta(params, new_params, lr_scale):
+    """Exact lr backoff for an already-applied first-order update:
+    p' = p + s * (p_new - p).  For SGD(+momentum) the delta IS -lr * mv,
+    so scaling it equals running the step at lr * s; optimizer state
+    (momenta / Adam moments) is lr-free and needs no rescaling.  The
+    interpolation runs in f32 and casts back, touching only inexact
+    leaves (patterns ride through from new_params)."""
+    def blend(p0, p1):
+        if not jnp.issubdtype(p1.dtype, jnp.inexact):
+            return p1
+        d = p1.astype(jnp.float32) - p0.astype(jnp.float32)
+        return (p0.astype(jnp.float32) + lr_scale * d).astype(p1.dtype)
+    return jax.tree.map(blend, params, new_params)
+
+
 def _make_fused_train_step(cfg: ArchConfig, optimizer: FusedSGD):
     """The fused BP+UP step: the paper's concurrent backprop+update made
     literal.  The momentum buffers and the [lr, momentum] pair are
@@ -69,18 +120,31 @@ def _make_fused_train_step(cfg: ArchConfig, optimizer: FusedSGD):
     junction custom_vjp applies the update inside the backward kernels
     (weight gradients never reach HBM) and returns the UPDATED params /
     momenta as those leaves' cotangents; optimizer.merge adopts them and
-    tree-maps only the dense leaves."""
+    tree-maps only the dense leaves.
+
+    ``lr_scale`` (guardian backoff) multiplies the lr entry of the hyp
+    table BEFORE injection — the backed-off rate rides the existing
+    hyp-table operand into the kernels, no retrace of the kernel graph.
+    metrics["nonfinite"] sums the junctions' in-kernel health flags (the
+    only divergence signal on this path: gradients never reach HBM)."""
     def loss(aug_params, batch):
         return M.loss_fn(cfg, aug_params, batch)
 
     vg = jax.value_and_grad(loss, has_aux=True, allow_int=True)
 
-    def train_step(params, opt_state, batch, step):
+    def train_step(params, opt_state, batch, step, lr_scale=None):
         mom = opt_state["mom"] if optimizer.momentum else None
-        aug = sl.inject_update_ctx(params, mom, optimizer.hyp(step))
+        hyp = optimizer.hyp(step)
+        if lr_scale is not None:
+            hyp = hyp * jnp.stack([jnp.float32(lr_scale),
+                                   jnp.float32(1.0)])
+        aug = sl.inject_update_ctx(params, mom, hyp)
         (l, metrics), grads = vg(aug, batch)
-        new_params, new_opt = optimizer.merge(grads, opt_state, params, step)
-        return new_params, new_opt, dict(metrics, loss=l)
+        new_params, new_opt = optimizer.merge(grads, opt_state, params, step,
+                                              lr_scale=lr_scale)
+        metrics = dict(metrics, loss=l,
+                       nonfinite=collect_junction_health(grads))
+        return new_params, new_opt, metrics
 
     return train_step
 
@@ -88,7 +152,15 @@ def _make_fused_train_step(cfg: ArchConfig, optimizer: FusedSGD):
 def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
                     microbatches: int = 1, *, jit: bool = True,
                     donate: bool = True):
-    """Returns train_step(params, opt_state, batch, step) -> (params, opt_state, metrics).
+    """Returns train_step(params, opt_state, batch, step[, lr_scale])
+    -> (params, opt_state, metrics).
+
+    ``lr_scale`` (optional, guardian backoff) scales the effective
+    learning rate of this one step: the fused path folds it into the
+    hyp-table operand, the two-pass path rescales the applied parameter
+    delta (exact for first-order rules).  metrics["nonfinite"] > 0 flags
+    an update that wrote (fused: in-kernel health flags) or would write
+    (two-pass: materialized-grad scan) non-finite parameters.
 
     By default the step comes back jit-compiled with params/opt_state
     DONATED (donate_argnums=(0, 1)): the caller's buffers are reused for
@@ -126,7 +198,7 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
     def _inexact(t):
         return jnp.issubdtype(t.dtype, jnp.inexact)
 
-    def train_step(params, opt_state, batch, step):
+    def train_step(params, opt_state, batch, step, lr_scale=None):
         if microbatches == 1:
             (l, metrics), grads = vg(params, batch)
         else:
@@ -150,7 +222,13 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
                 lambda g: g / microbatches if _inexact(g) else g, grads)
             metrics = jax.tree.map(lambda t: t[-1], ms)
         new_params, new_opt = optimizer.update(grads, opt_state, params, step)
-        metrics = dict(metrics, loss=l)
+        if lr_scale is not None:
+            # optimizer.update has no lr hook; scaling the applied delta is
+            # exact for first-order rules (delta = -lr * mv) and leaves the
+            # lr-free optimizer state untouched
+            new_params = scale_params_delta(params, new_params, lr_scale)
+        metrics = dict(metrics, loss=l,
+                       nonfinite=count_nonfinite_grads(grads))
         return new_params, new_opt, metrics
 
     if jit:

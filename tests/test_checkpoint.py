@@ -58,6 +58,110 @@ def test_async_saver(tmp_path):
     assert jnp.array_equal(jax.tree.leaves(got)[0], jax.tree.leaves(t)[0])
 
 
+def test_restore_latest_falls_back_past_corruption(tmp_path):
+    """A corrupted newest checkpoint must not kill auto-resume: fallback
+    to the next-newest verifiable one, logged."""
+    t = _tree()
+    C.save(tmp_path, 1, t, extra={"step": 1})
+    C.save(tmp_path, 2, _tree(1), extra={"step": 2})
+    npz = tmp_path / "step_0000000002" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:50])          # torn write
+    logs = []
+    s, tree, extra = C.restore_latest(tmp_path, t, log=logs.append)
+    assert s == 1 and extra["step"] == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(tree)):
+        assert jnp.array_equal(a, b)
+    assert any("falling back" in l for l in logs)
+    # every candidate corrupt -> (None, None, None), no exception
+    (tmp_path / "step_0000000001" / "arrays.npz").write_bytes(b"junk")
+    s, tree, extra = C.restore_latest(tmp_path, t, log=logs.append)
+    assert s is None and tree is None and extra is None
+
+
+def test_full_checksum_catches_tail_corruption(tmp_path):
+    """Head-mode digests only the first MiB per leaf: tail corruption in
+    a >1MiB leaf slips through.  full_checksum=True catches it."""
+    big = {"w": jnp.arange(600_000, dtype=jnp.float32)}   # 2.4 MB leaf
+
+    def tamper(d):
+        npz = d / "step_0000000001" / "arrays.npz"
+        data = {k: v.copy() for k, v in np.load(npz).items()}
+        data["leaf_0"][-1] += 1.0
+        np.savez(npz, **data)
+
+    C.save(tmp_path / "head", 1, big)
+    tamper(tmp_path / "head")
+    got, _ = C.restore(tmp_path / "head", 1, big)   # head digest misses it
+    assert float(np.asarray(got["w"])[-1]) != 599_999.0
+
+    C.save(tmp_path / "full", 1, big, full_checksum=True)
+    tamper(tmp_path / "full")
+    with pytest.raises(IOError):
+        C.restore(tmp_path / "full", 1, big)
+
+
+def test_kill_between_npz_write_and_rename(tmp_path, monkeypatch):
+    """Hard kill after the npz/manifest writes but before the rename (no
+    cleanup runs): the leftover .tmp dir must not shadow or corrupt the
+    previous checkpoint."""
+    t = _tree()
+    C.save(tmp_path, 1, t, extra={"step": 1})
+
+    def die(*a, **k):
+        raise KeyboardInterrupt("simulated kill")
+
+    monkeypatch.setattr(C.os, "rename", die)
+    monkeypatch.setattr(C.shutil, "rmtree", lambda *a, **k: None)
+    with pytest.raises(KeyboardInterrupt):
+        C.save(tmp_path, 2, _tree(1), extra={"step": 2})
+    monkeypatch.undo()
+
+    leftovers = [d for d in tmp_path.iterdir() if d.name.startswith(".tmp_")]
+    assert leftovers, "kill before rename should leave the tmp dir behind"
+    assert C.latest_step(tmp_path) == 1
+    s, tree, extra = C.restore_latest(tmp_path, t)
+    assert s == 1 and extra["step"] == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(tree)):
+        assert jnp.array_equal(a, b)
+
+
+def test_async_save_failure_surfaces_on_wait(tmp_path, monkeypatch):
+    """A crash inside an in-flight AsyncSaver.save must surface on wait()
+    and leave latest_step pointing at the previous good checkpoint —
+    and the saver must stay usable afterwards."""
+    s = C.AsyncSaver()
+    s.save(tmp_path, 1, _tree(), extra={"step": 1})
+    s.wait()
+
+    def die(*a, **k):
+        raise IOError("simulated disk failure")
+
+    monkeypatch.setattr(C.np, "savez", die)
+    s.save(tmp_path, 2, _tree(1), extra={"step": 2})
+    with pytest.raises(IOError):
+        s.wait()
+    monkeypatch.undo()
+    assert C.latest_step(tmp_path) == 1
+    s.save(tmp_path, 3, _tree(2), extra={"step": 3})
+    s.wait()
+    assert C.latest_step(tmp_path) == 3
+
+
+def test_gc_keeps_healthy_floor(tmp_path):
+    """Retention never deletes the latest healthy mark: steps 1..5,
+    step 2 healthy, keep_last_k=2 -> {2, 4, 5} remain."""
+    for st in range(1, 6):
+        C.save(tmp_path, st, _tree(st))
+    C.mark_healthy(tmp_path, 2)
+    assert C.is_healthy(tmp_path, 2)
+    removed = C.gc_checkpoints(tmp_path, keep_last_k=2)
+    assert removed == [1, 3]
+    assert C.complete_steps(tmp_path) == [2, 4, 5]
+    assert C.latest_healthy_step(tmp_path) == 2
+    # idempotent: nothing further to delete
+    assert C.gc_checkpoints(tmp_path, keep_last_k=2) == []
+
+
 def test_elastic_reshard_subprocess(tmp_path):
     """Save on an 8-device mesh, restore onto a 4-device mesh (elastic)."""
     import subprocess, sys, textwrap
