@@ -21,7 +21,10 @@ fwd + bwd + SGD-momentum update: the ``jnp`` rows run the two-pass
 reference (materialized dw, tree-mapped update), the ``pallas`` rows the
 fused BP+UP path (update applied in the backward kernels' epilogue,
 params donated through input_output_aliasing — the dw HBM round-trip the
-fused path exists to delete).
+fused path exists to delete).  ``engine.update.adam.*`` rows (ISSUE 7)
+run the same cycle under the in-kernel Adam epilogue: a second fp32
+accumulator (vel) aliased in place and a full ``(HYP_K,)`` registry row
+instead of the legacy (2,) [lr, momentum] pair.
 
 ``bench.guard.overhead`` (ISSUE 6) times the fused MNIST update cycle
 with the in-kernel [E] divergence-flag output (the guardian's detector)
@@ -52,7 +55,7 @@ from repro.core import sparse_linear as sl
 from repro.core.sparsity import SparsityConfig, make_block_pattern
 from repro.kernels import block_sparse_matmul as bsm
 from repro.models import moe as moe_mod
-from repro.optim import constant_schedule, fused_sgd
+from repro.optim import constant_schedule, fused_adam, fused_sgd
 
 SHAPES = {
     # name: (n_in, n_out, density, block, M_fast, M_full)
@@ -88,24 +91,67 @@ def _time_fwd_bwd(params, x, engine, n=3):
 
 
 _UPDATE_LR, _UPDATE_BETA = 1e-3, 0.9
+_UPDATE_B2, _UPDATE_EPS = 0.95, 1e-8
 
 
-def _time_junction_update(params, x, mode, n=3, with_health=False):
-    """One full junction train step — fwd + bwd + SGD-momentum update.
+def _time_junction_update(params, x, mode, n=3, with_health=False,
+                          optim="sgd"):
+    """One full junction train step — fwd + bwd + in-kernel update.
     mode "jnp": two-pass reference (dw materialized, update tree-mapped);
     mode "pallas": fused BP+UP (ops.junction_train_update, dw consumed by
-    the in-kernel update, params/momenta aliased in place).  with_health
-    additionally rides the [E] divergence-flag output through the update
-    kernels' flush epilogue (the guardian's in-kernel detector)."""
+    the in-kernel update, params/accumulators aliased in place).  optim
+    picks the epilogue rule — "sgd" (momentum) rides the legacy (2,) hyp
+    pair, "adam" a full (HYP_K,) registry row plus the second (vel) fp32
+    accumulator.  with_health additionally rides the [E] divergence-flag
+    output through the update kernels' flush epilogue (the guardian's
+    in-kernel detector)."""
     from repro.kernels import ops as kops
 
-    hyp = jnp.asarray([_UPDATE_LR, _UPDATE_BETA], jnp.float32)
+    if optim == "adam":
+        hyp = (jnp.zeros((bsm.HYP_K,), jnp.float32)
+               .at[bsm.COL_LR].set(_UPDATE_LR)
+               .at[bsm.COL_B1].set(_UPDATE_BETA)
+               .at[bsm.COL_B2].set(_UPDATE_B2)
+               .at[bsm.COL_EPS].set(_UPDATE_EPS)
+               .at[bsm.COL_T].set(1.0)
+               .at[bsm.COL_GS].set(1.0))
+    else:
+        hyp = jnp.asarray([_UPDATE_LR, _UPDATE_BETA], jnp.float32)
     pat = (params["idx"], params["rev_ob"], params["rev_t"],
            params["rev_cnt"])
     mom = jnp.zeros(params["w"].shape, jnp.float32)
     mom_b = jnp.zeros(params["b"].shape, jnp.float32)
+    vel = jnp.zeros(params["w"].shape, jnp.float32)
+    vel_b = jnp.zeros(params["b"].shape, jnp.float32)
 
-    if mode == "pallas" and with_health:
+    if mode == "pallas" and optim == "adam":
+        @jax.jit
+        def step(w, b, mom, mom_b, x):
+            def loss(w, b, m, mb, v, vb):
+                return jnp.sum(kops.junction_train_update(
+                    x, w, *pat, bias=b, act="sigmoid", hyp=hyp,
+                    mom=m, mom_b=mb, vel=v, vel_b=vb))
+            return jax.grad(loss, (0, 1, 2, 3, 4, 5))(
+                w, b, mom, mom_b, vel, vel_b)
+    elif mode == "jnp" and optim == "adam":
+        c1 = 1.0 - _UPDATE_BETA         # bias correction at t = 1
+        c2 = 1.0 - _UPDATE_B2
+
+        @jax.jit
+        def step(w, b, mom, mom_b, x):
+            def loss(w, b):
+                return jnp.sum(sl.apply(dict(params, w=w, b=b), x,
+                                        engine="jnp", act="sigmoid"))
+            gw, gb = jax.grad(loss, (0, 1))(w, b)
+            m = _UPDATE_BETA * mom + (1 - _UPDATE_BETA) * gw
+            v = _UPDATE_B2 * vel + (1 - _UPDATE_B2) * gw * gw
+            mb_ = _UPDATE_BETA * mom_b + (1 - _UPDATE_BETA) * gb
+            vb_ = _UPDATE_B2 * vel_b + (1 - _UPDATE_B2) * gb * gb
+            nw = w - _UPDATE_LR * (m / c1) / (jnp.sqrt(v / c2) + _UPDATE_EPS)
+            nb = b - _UPDATE_LR * (mb_ / c1) / (jnp.sqrt(vb_ / c2)
+                                                + _UPDATE_EPS)
+            return nw, nb, m, mb_, v, vb_
+    elif mode == "pallas" and with_health:
         h0 = jnp.zeros((1,), jnp.float32)
 
         @jax.jit
@@ -143,12 +189,19 @@ def _time_junction_update(params, x, mode, n=3, with_health=False):
     return (time.perf_counter() - t0) / n
 
 
-def _time_moe_update(params, x, mode, n=3):
+def _time_moe_update(params, x, mode, n=3, optim="sgd"):
     """Full MoE layer train-update cycle through the inject/merge plumbing
     the fused train step uses (core/sparse_linear.inject_update_ctx +
-    optim.FusedSGD.merge) vs the two-pass optimizer.update reference."""
+    optim.FusedOptimizer.merge) vs the two-pass optimizer.update
+    reference.  optim "adam" swaps in fused_adam (second vel accumulator
+    per junction, (HYP_K,) registry row)."""
     cfg = _moe_cfg("pallas" if mode == "pallas" else "jnp")
-    opt = fused_sgd(constant_schedule(_UPDATE_LR), momentum=_UPDATE_BETA)
+    if optim == "adam":
+        opt = fused_adam(constant_schedule(_UPDATE_LR), b1=_UPDATE_BETA,
+                         b2=_UPDATE_B2, eps=_UPDATE_EPS)
+    else:
+        opt = fused_sgd(constant_schedule(_UPDATE_LR),
+                        momentum=_UPDATE_BETA)
     st = opt.init(params)
     step0 = jnp.zeros((), jnp.int32)
 
@@ -159,7 +212,8 @@ def _time_moe_update(params, x, mode, n=3):
     if mode == "pallas":
         @jax.jit
         def step(params, st, x):
-            aug = sl.inject_update_ctx(params, st["mom"], opt.hyp(step0))
+            aug = sl.inject_update_ctx(params, opt.slots(st),
+                                       opt.hyp(step0))
             grads = jax.grad(loss, allow_int=True)(aug)
             return opt.merge(grads, st, params, step0)
     else:
@@ -269,6 +323,18 @@ def bench(fast=True):
                        f"sgd-momentum {'fused' if engine == 'pallas' else 'two-pass'} "
                        f"mode={mode}",
         })
+    # ... the same cycle under the in-kernel Adam epilogue (ISSUE 7):
+    # second fp32 accumulator (vel) aliased in place, (HYP_K,) hyp row
+    for engine in ("jnp", "pallas"):
+        dt = _time_junction_update(up_params, xu, engine, n=3, optim="adam")
+        mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+        rows.append({
+            "name": f"engine.update.adam.mnist.{engine}",
+            "us_per_call": dt * 1e6,
+            "derived": f"M={Mu} {n_in}->{n_out} d={density} bs={block} "
+                       f"adam {'fused' if engine == 'pallas' else 'two-pass'} "
+                       f"mode={mode}",
+        })
     # divergence-guard overhead (ISSUE 6): the fused MNIST update cycle
     # with the in-kernel [E] health output riding the flush epilogue vs
     # without — the cost of always-on non-finite detection
@@ -293,6 +359,16 @@ def bench(fast=True):
             "us_per_call": dt * 1e6,
             "derived": f"T={T} E={E} top{K} {d}->{f} d={density} bs={block} "
                        f"sgd-momentum {'fused' if engine == 'pallas' else 'two-pass'} "
+                       f"mode={mode}",
+        })
+    for engine in ("jnp", "pallas"):
+        dt = _time_moe_update(moe_params, x, engine, n=3, optim="adam")
+        mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+        rows.append({
+            "name": f"engine.update.adam.moe.{engine}",
+            "us_per_call": dt * 1e6,
+            "derived": f"T={T} E={E} top{K} {d}->{f} d={density} bs={block} "
+                       f"adam {'fused' if engine == 'pallas' else 'two-pass'} "
                        f"mode={mode}",
         })
     rows.extend(_sweep_rows(fast, on_tpu))

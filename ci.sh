@@ -7,7 +7,9 @@
 #
 # Fails on test failures, a population sweep that names no winner (the
 # tiny 2-round MNIST density x lr smoke, E=4 candidates — guards the
-# search subsystem end to end), bench harness errors (benchmarks/run.py
+# search subsystem end to end; an lr x b1 smoke under --optim adam does
+# the same for the in-kernel Adam epilogue), bench harness errors
+# (benchmarks/run.py
 # exits nonzero when any bench raises or --only names an unknown bench),
 # or an empty bench artifact (guards the silent-no-op class of
 # regressions).
@@ -50,6 +52,28 @@ pruned = sum(1 for m in led["members"] if m["pruned_at"] is not None)
 print(f"[ci] sweep winner: density={w['config']['density']} "
       f"lr={w['config']['lr']} eval_loss={w['eval_losses'][-1]:.4f} "
       f"({pruned}/{len(led['members'])} pruned)")
+PY
+
+echo "== adam sweep smoke (in-kernel Adam epilogue: 2-round lr x b1, E=4) =="
+# same harness under --optim adam: every member updates through the
+# [E, HYP_K] registry rows (distinct lr/b1 per member) and the ledger
+# must still name a winner
+python -m repro.launch.sweep --optim adam --densities 0.5 \
+  --lrs 0.001,0.005 --b1s 0.8,0.9 \
+  --rounds 2 --steps-per-round 2 --batch 32 --samples 256 --eval-samples 64 \
+  --block 32 --hidden 128 --engine jnp --tag "${TAG}-adam" \
+  --out "SWEEP_${TAG}_adam.json"
+python - "SWEEP_${TAG}_adam.json" <<'PY'
+import json, sys
+led = json.load(open(sys.argv[1]))
+w = led.get("winner")
+if not (w and w.get("config") and w.get("eval_losses")):
+    sys.exit(f"[ci] adam sweep ledger {sys.argv[1]} names no winner")
+if w["config"].get("opt") != "adam":
+    sys.exit(f"[ci] adam sweep winner is not an adam member: {w['config']}")
+print(f"[ci] adam sweep winner: lr={w['config']['lr']} "
+      f"b1={w['config']['momentum']} "
+      f"eval_loss={w['eval_losses'][-1]:.4f}")
 PY
 
 echo "== fault injection (guardian, crash recovery, quarantine smoke) =="
@@ -96,6 +120,8 @@ THRESHOLDS = {
     "engine.moe.pallas": 1.35,
     "engine.update.moe.jnp": 1.4,
     "engine.update.moe.pallas": 1.4,
+    "engine.update.adam.moe.jnp": 1.4,
+    "engine.update.adam.moe.pallas": 1.4,
     "bench.sweep.mnist.population": 1.5,
     "bench.sweep.mnist.sequential": 1.5,
 }

@@ -103,13 +103,16 @@ class ArchConfig:
     #   "auto"   — pallas on TPU backends, jnp elsewhere (default)
     # resolved once at step-build time (train/steps.py, serve/engine.py)
     engine: str = "auto"
-    # fused BP+UP: apply the SGD(+momentum) update to pre-defined-sparse
+    # fused BP+UP: apply the optimizer update to pre-defined-sparse
     # junction weights INSIDE the backward kernels (the paper's concurrent
-    # update stage) so weight gradients never materialize in HBM.  Takes
-    # effect only when train/steps.py resolves the step as eligible
-    # (pallas engine, optim.fused_sgd without grad clipping, single
-    # microbatch, param_dtype == dtype); otherwise — and always for the
-    # jnp engine and launch/dryrun.py — the two-pass reference path runs.
+    # update stage) so weight gradients never materialize in HBM —
+    # SGD+momentum or Adam, per the FusedOptimizer's [E, HYP_K] hyp row
+    # (grad clipping folds into the gs column via a norm pre-pass;
+    # microbatches>1 runs as the full batch).  Takes effect only when
+    # train/steps.py resolves the step as eligible (pallas engine, an
+    # optim.FusedOptimizer — fused_sgd / fused_adam — and
+    # param_dtype == dtype); otherwise — and always for the jnp engine
+    # and launch/dryrun.py — the two-pass reference path runs.
     fused_update: bool = False
 
     # ---------------------------------------------------------------- helpers

@@ -49,17 +49,24 @@ MOE_PATTERN_LEAVES = ("idx_in", "idx_out",
 # Fused BP+UP context leaves (train/steps.py injects them into every
 # pattern-bearing junction dict before differentiating; they exist only
 # inside the traced fused train step, never in the stored params tree):
-# UPDATE_HYP_LEAF carries the [lr, momentum] pair — or, for E-batched
-# population junctions (src/repro/search/), a per-unit [E, 2] table —
-# broadcast over any layer stacking dims so lax.scan slices it per layer.
-# FUSED_MOM maps each
-# trainable junction weight leaf to its fp32 momentum accumulator's
-# injected name.  The custom_vjp returns the UPDATED params / momenta as
-# these leaves' cotangents — the "grads" tree of a fused step carries new
-# parameters, not gradients, at junction leaves.
+# UPDATE_HYP_LEAF carries the optimizer's hyp row — the legacy
+# [lr, momentum] pair or the full (HYP_K,) registry row
+# (kernels/block_sparse_matmul.py docstring) — or, for E-batched
+# population junctions (src/repro/search/), a per-unit [E, 2] / [E, HYP_K]
+# table — broadcast over any layer stacking dims so lax.scan slices it
+# per layer.  FUSED_SLOT_NAMES maps each optimizer accumulator slot
+# (position i = the kernels' slot i: 0 = SGD momentum / Adam m, 1 = Adam
+# v) from each trainable junction weight leaf to that slot's injected
+# name; WHICH slots are injected is the kernels' static optimizer switch
+# (FusedOptimizer.slot_keys()).  The custom_vjp returns the UPDATED
+# params / slots as these leaves' cotangents — the "grads" tree of a
+# fused step carries new parameters, not gradients, at junction leaves.
 UPDATE_HYP_LEAF = "upd_hyp"
 FUSED_MOM = {"w": "mom_w", "b": "mom_b",
              "wi": "mom_wi", "wg": "mom_wg", "wo": "mom_wo"}
+FUSED_VEL = {"w": "vel_w", "b": "vel_b",
+             "wi": "vel_wi", "wg": "vel_wg", "wo": "vel_wo"}
+FUSED_SLOT_NAMES = (FUSED_MOM, FUSED_VEL)
 # Divergence-detector leaves: dummy f32 [..., E] zeros injected alongside
 # upd_hyp; their cotangents carry the update kernels' per-unit non-finite
 # counts (kernels/block_sparse_matmul.py with_health contract).  A single
@@ -77,23 +84,46 @@ def is_junction(p) -> bool:
     return isinstance(p, dict) and ("idx" in p or "idx_in" in p)
 
 
-def inject_update_ctx(params, mom, hyp):
+def normalize_slots(slots):
+    """Lift every accepted optimizer-state shape to the canonical tuple of
+    per-slot trees: None → () (plain SGD), a single params-mirroring tree
+    → a 1-tuple (the PR 4 momentum contract), a tuple/list of trees →
+    itself (Adam passes (m, v)).  The ambiguity between "one tree" and
+    "tuple of trees" is static: params trees are dicts or lists of dicts
+    at top level, never tuples."""
+    if slots is None:
+        return ()
+    if isinstance(slots, tuple):
+        return slots
+    return (slots,)
+
+
+def inject_update_ctx(params, slots, hyp):
     """Copy of ``params`` with the fused-update context added to every
     junction dict: ``upd_hyp`` (broadcast to the junction's stacking dims,
-    derived from its idx leaf) plus the junction's momentum accumulators
-    from the mirrored ``mom`` tree (None → plain SGD, no mom leaves).
-    ``hyp`` is the shared (2,) [lr, momentum] pair or — for E-batched
-    population junctions — a per-unit [E, 2] table; either shape rides
-    through to ``junction_train_update`` unchanged.  Every junction also
-    gets its dummy health leaf(s) (zeros, shape stack + (E,)) so the
-    in-kernel divergence flags come back as their cotangents.  Dense
-    leaves ride through untouched — the optimizer tree-maps them."""
-    def rec(p, m):
+    derived from its idx leaf) plus the junction's optimizer accumulator
+    slots from the mirrored trees in ``slots`` (anything
+    ``normalize_slots`` accepts: None → plain SGD, one tree → momentum,
+    an (m, v) pair → Adam — slot i lands under its ``FUSED_SLOT_NAMES[i]``
+    leaf names, which is how the kernels select the optimizer).  ``hyp``
+    is the shared hyp row ((2,) legacy pair or (HYP_K,) registry row) or
+    — for E-batched population junctions — a per-unit [E, 2] / [E, HYP_K]
+    table; any accepted shape rides through to ``junction_train_update``
+    unchanged.  Every junction also gets its dummy health leaf(s) (zeros,
+    shape stack + (E,)) so the in-kernel divergence flags come back as
+    their cotangents.  Dense leaves ride through untouched — the
+    optimizer tree-maps them."""
+    slots = normalize_slots(slots)
+    if len(slots) > len(FUSED_SLOT_NAMES):
+        raise ValueError(f"{len(slots)} accumulator slots, but the kernel "
+                         f"contract defines {len(FUSED_SLOT_NAMES)}")
+
+    def rec(p, ms):
         if isinstance(p, dict):
             out = {}
             for k, v in p.items():
                 if isinstance(v, (dict, list, tuple)):
-                    out[k] = rec(v, m[k] if m is not None else None)
+                    out[k] = rec(v, tuple(m[k] for m in ms))
                 else:
                     out[k] = v
             if is_junction(p):
@@ -108,16 +138,16 @@ def inject_update_ctx(params, mom, hyp):
                 for hk in (MOE_HEALTH_LEAVES if "idx_in" in p
                            else (UPDATE_HEALTH_LEAF,)):
                     out[hk] = zeros
-                if m is not None:
-                    for k, mk in FUSED_MOM.items():
+                for m, names in zip(ms, FUSED_SLOT_NAMES):
+                    for k, mk in names.items():
                         if k in p and not isinstance(p[k], dict):
                             out[mk] = m[k]
             return out
         if isinstance(p, (list, tuple)):
-            return type(p)(rec(v, m[i] if m is not None else None)
+            return type(p)(rec(v, tuple(m[i] for m in ms))
                            for i, v in enumerate(p))
         return p
-    return rec(params, mom)
+    return rec(params, slots)
 
 
 def is_sparse(params: Params) -> bool:
@@ -234,6 +264,7 @@ def apply(params: Params, x: jax.Array, *, engine: str = "auto",
                 params["rev_t"], params["rev_cnt"], bias=params.get("b"),
                 act=act, hyp=params[UPDATE_HYP_LEAF],
                 mom=params.get("mom_w"), mom_b=params.get("mom_b"),
+                vel=params.get("vel_w"), vel_b=params.get("vel_b"),
                 health=params.get(UPDATE_HEALTH_LEAF))
         return ops.junction_matmul(
             x, params["w"], params["idx"], params["rev_ob"], params["rev_t"],

@@ -51,27 +51,22 @@ ONE block pattern that rides once in scalar prefetch — the paper's
 * **update_dw / update_gated_dw** — the fused **BP+UP** variants (the
   paper's concurrent backprop + update pipeline): same grid and the same
   M-innermost VMEM-scratch gradient reduction as ``dw``/``gated_dw``,
-  but instead of flushing the weight gradient to HBM the epilogue
-  applies the SGD(+momentum) update **in-kernel** on the last M step:
-
-      mom' = hyp[e, 1] * mom + dw_tile     (fp32, when momentum buffers
-                                            ride along)
-      w'   = (w - hyp[e, 0] * mom').astype(w.dtype)
-
-  ``hyp`` is a per-unit ``[E, 2]`` [lr, momentum] table streaming through
-  scalar prefetch, indexed by the expert grid coordinate — every junction
-  unit sharing the pattern can train under DIFFERENT hyperparameters in
-  the same launch (the population-search contract, src/repro/search/; a
-  single model is the ``E=1`` row).  ``w`` (and
-  the fp32 ``mom`` accumulators, and ``b``/``mom_b`` for biased layers)
-  come in as per-(e, ob) resident tiles and leave as outputs declared
-  with ``input_output_aliases``, so XLA rewrites the parameter buffers
-  in place — neither ``dw`` nor a second copy of ``w`` ever touches HBM.
-  The aliasing contract: every parameter operand maps to the output at
+  but instead of flushing the weight gradient to HBM the flush epilogue
+  applies the optimizer update **in-kernel** on the last M step.  The
+  optimizer is a STATIC switch keyed on which fp32 accumulator slots
+  ride along (``_epilogue_step``): momentum-only runs SGD(+momentum),
+  a second (m, v) slot pair runs Adam with per-step bias correction and
+  decoupled weight decay — the hyperparameters come from the per-unit
+  ``[E, HYP_K]`` hyp table in scalar prefetch (registry below).
+  Every parameter and accumulator operand comes in as a per-(e, ob)
+  resident tile and leaves as an output declared with
+  ``input_output_aliases``, so XLA rewrites the buffers in place —
+  neither ``dw`` nor a second copy of ``w`` ever touches HBM.  The
+  aliasing contract: every parameter operand maps to the output at
   the same relative position, the input/output BlockSpecs are identical,
   and each (e, ob) tile is read and written exactly once (the M loop is
   innermost), so no grid step can observe a partially-updated tile.
-  Momentum accumulators are fp32 even for bf16 params.
+  Accumulator slots are fp32 even for bf16 params.
 
   With ``with_health=True`` the update kernels additionally emit a tiny
   **non-aliased** ``[E, 1]`` int32 health output — the in-kernel
@@ -95,6 +90,60 @@ ONE block pattern that rides once in scalar prefetch — the paper's
   (``dz_g = dh * u * silu'(g)``, ``dz_u = dh * silu(g)``) from the saved
   ``(g, u)`` residuals, ``gated_dx`` double-buffering BOTH reverse
   weight streams.
+
+Hyp-column registry and accumulator-slot layout
+-----------------------------------------------
+
+``hyp`` is the per-unit ``[E, HYP_K]`` f32 hyperparameter table riding
+scalar prefetch; the flush epilogue reads row ``e = program_id(0)``, so
+every junction unit sharing the pattern trains under DIFFERENT
+hyperparameters in the same launch (the population-search contract,
+src/repro/search/; a single model is the ``E=1`` row).  The columns
+(``HYP_COLS`` / ``COL_*`` constants — a cross-layer ABI shared with
+``optim.FusedOptimizer.hyp`` rows, ``train/steps.py``'s lr/clip folds
+and the population engine's sweep axes; append-only):
+
+    col 0  lr    learning rate.  The guardian's backoff and any other
+                 post-hoc lr scale multiply THIS column (no retrace).
+    col 1  b1    SGD: momentum coefficient; Adam: first-moment decay.
+    col 2  b2    Adam second-moment decay (ignored by the SGD branch).
+    col 3  eps   Adam denominator epsilon.
+    col 4  wd    Adam decoupled weight decay, applied as ``+ wd * w``.
+    col 5  t     Adam 1-based step count for bias correction
+                 (``c_i = 1 - b_i ** t``); the caller re-stamps it per
+                 step (``FusedAdam.hyp`` / the sweep scheduler).
+    col 6  gs    gradient pre-scale: the accumulated fp32 gradient is
+                 multiplied by ``gs`` BEFORE the optimizer formula.
+                 Global-norm grad clipping folds in here EXACTLY —
+                 folding a clip scale into lr instead would warp the
+                 momentum/Adam accumulator state.  1 on the unscaled
+                 path; 0 (with the whole row zeroed) freezes a
+                 pruned/quarantined unit in place.
+
+A legacy ``[lr, momentum]`` pair — ``(2,)`` or ``[E, 2]`` — normalizes
+to ``[lr, momentum, 0, 0, 0, 0, 1]`` (``normalize_hyp``), bitwise
+identical SGD numerics.
+
+Accumulator slots are fp32 tensors shaped like the weight (bias)
+operand they accompany, aliased in place exactly like the weights;
+WHICH slots ride along is the static optimizer switch — no hyp column
+selects the optimizer, the operand list does:
+
+    SGD            w [, b]                          (no slots)
+    SGD+momentum   w, mom [, b, mom_b]              slot 0 = velocity
+    Adam           w, mom, vel [, b, mom_b, vel_b]  slot 0 = first
+                   moment m, slot 1 = second moment v
+
+Operand order (and the mirrored output order) is always
+``w, slots..., b, bias slots...``; the gated kernel interleaves
+``wg, wi, mg, mi, vg, vi``.  To add an optimizer: append its columns
+to ``HYP_COLS``, add its slot(s) to this layout (and to
+``core/sparse_linear.FUSED_SLOT_NAMES``), and give ``_epilogue_step``
+a new statically-selected branch.  The Adam branch's guards (zero
+bias-correction denominators and a zero update denominator resolve to
+an exact-zero update) exist so an all-zero hyp row freezes a unit under
+EITHER optimizer; with real hyperparameters the guards are inert and
+the math matches ``optim.adam``'s two-pass update to fp32 round-off.
 
 Tile tuning — one table for every configuration
 -----------------------------------------------
@@ -137,6 +186,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_BM = 128
+
+# Hyp-column registry: the [E, HYP_K] table's cross-layer ABI.  Append
+# only — see the module docstring's registry section before changing.
+HYP_COLS = ("lr", "b1", "b2", "eps", "wd", "t", "gs")
+HYP_K = len(HYP_COLS)
+COL_LR, COL_B1, COL_B2, COL_EPS, COL_WD, COL_T, COL_GS = range(HYP_K)
 
 # Activations whose gradient needs the pre-activation s (saved as a second
 # forward output); the rest reconstruct the gradient from y itself.
@@ -800,38 +855,106 @@ def gated_dw(x, dh, idx, g, u, *, bm: int | None = None,
 N_SCALAR_PREFETCH_UPDATE = 2    # (idx, hyp) — alias indices count these
 
 
-def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
-              with_bias: bool = True, bm: int | None = None,
-              with_health: bool = False, interpret: bool = False):
-    """The fused UP stage: the ``dw`` gradient reduction with the SGD
-    (+momentum) update applied in the flush epilogue — returns
-    ``(new_w, new_b, new_mom, new_mom_b, health)`` (None where the
-    operand is absent) instead of ``(dw, db)``, with every parameter
-    operand aliased to its output (``input_output_aliases``), so the
-    weight gradient never leaves VMEM scratch and the parameters are
-    rewritten in place.
+def normalize_hyp(hyp, E: int, *, name: str = "hyp"):
+    """Normalize every accepted hyp shape to the canonical ``[E, HYP_K]``
+    f32 table: a ``(HYP_K,)`` row broadcasts to all units, and a legacy
+    ``(2,)`` / ``[E, 2]`` [lr, momentum] pair pads to
+    ``[lr, momentum, 0, 0, 0, 0, 1]`` — bitwise-identical SGD numerics
+    (gs=1 is an exact no-op, b2..t are ignored by the SGD branch)."""
+    hyp = jnp.asarray(hyp, jnp.float32)
+    if hyp.shape in ((2,), (HYP_K,)):
+        hyp = jnp.broadcast_to(hyp, (E,) + hyp.shape)
+    if hyp.shape == (E, 2):
+        hyp = jnp.concatenate(
+            [hyp, jnp.zeros((E, HYP_K - 3), jnp.float32),
+             jnp.ones((E, 1), jnp.float32)], axis=1)
+    if hyp.shape != (E, HYP_K):
+        raise ValueError(
+            f"{name} must be a (2,) [lr, momentum] pair, a ({HYP_K},) "
+            f"[{', '.join(HYP_COLS)}] row, or a per-unit [E={E}, 2] / "
+            f"[E={E}, {HYP_K}] table, got {hyp.shape}")
+    return hyp
 
-    hyp is the scalar-prefetched ``[E, 2]`` f32 per-unit [lr, momentum]
-    table — the epilogue reads row ``e = program_id(0)``, so each junction
-    unit updates under its own hyperparameters (ops.py broadcasts a plain
-    (2,) pair to all units); mom/mom_b are fp32 accumulators (None →
-    plain SGD).  Same grid, BlockSpecs and default row tile as ``dw``, so
-    the fp32 accumulation order matches the two-pass path exactly (parity
-    to fp32 round-off).
+
+def _epilogue_step(h, acc, w32, mom, vel, with_health):
+    """One tile's in-kernel optimizer step from the fp32 gradient
+    accumulator ``acc``: SGD(+momentum) when ``vel`` is None, Adam when
+    the second accumulator rides along (the static slot switch of the
+    module docstring).  ``h(col)`` reads the unit's hyp row; returns
+    ``(new_w32, new_mom, new_vel, ok)`` with ``ok`` the tile's isfinite
+    health verdict (None unless with_health).
+
+    The Adam guards make an all-zero hyp row an exact freeze: pow(0, 0)
+    is 1, so both bias-correction denominators hit the ``c == 0 -> 1``
+    guard, and eps=0 makes the update denominator 0, which resolves to a
+    zero update — w' = w bitwise.  With real hyperparameters every guard
+    predicate is false and the selected values are the reference
+    formula's, so parity with ``optim.adam`` is unaffected.  Health
+    checks the raw accumulators (m', v'), never the guarded update — a
+    ``where`` would mask NaNs (NaN comparisons are false)."""
+    g = h(COL_GS) * acc
+    if vel is None:
+        mv = g if mom is None else h(COL_B1) * mom + g
+        new_w32 = w32 - h(COL_LR) * mv
+        ok = jnp.all(jnp.isfinite(mv)) if with_health else None
+        return new_w32, (mv if mom is not None else None), None, ok
+    b1, b2 = h(COL_B1), h(COL_B2)
+    m1 = b1 * mom + (1.0 - b1) * g
+    v2 = b2 * vel + (1.0 - b2) * jnp.square(g)
+    t = h(COL_T)
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+    c1 = jnp.where(c1 == 0.0, 1.0, c1)
+    c2 = jnp.where(c2 == 0.0, 1.0, c2)
+    den = jnp.sqrt(v2 / c2) + h(COL_EPS)
+    upd = jnp.where(den == 0.0, 0.0, (m1 / c1) / den)
+    upd = upd + h(COL_WD) * w32
+    new_w32 = w32 - h(COL_LR) * upd
+    ok = (jnp.logical_and(jnp.all(jnp.isfinite(m1)),
+                          jnp.all(jnp.isfinite(v2)))
+          if with_health else None)
+    return new_w32, m1, v2, ok
+
+
+def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, vel=None,
+              vel_b=None, act: str = "none", with_bias: bool = True,
+              bm: int | None = None, with_health: bool = False,
+              interpret: bool = False):
+    """The fused UP stage: the ``dw`` gradient reduction with the
+    optimizer update applied in the flush epilogue — returns
+    ``(new_w, new_b, new_mom, new_mom_b, new_vel, new_vel_b, health)``
+    (None where the operand is absent) instead of ``(dw, db)``, with
+    every parameter operand aliased to its output
+    (``input_output_aliases``), so the weight gradient never leaves VMEM
+    scratch and the parameters are rewritten in place.
+
+    hyp is the scalar-prefetched per-unit ``[E, HYP_K]`` table of the
+    module docstring's column registry (any shape ``normalize_hyp``
+    accepts) — the epilogue reads row ``e = program_id(0)``, so each
+    junction unit updates under its own hyperparameters.  The
+    accumulator slots select the optimizer statically: mom/mom_b alone
+    → SGD(+momentum), plus vel/vel_b → Adam (m, v); all slots fp32.
+    Same grid, BlockSpecs and default row tile as ``dw``, so the fp32
+    accumulation order matches the two-pass path exactly (parity to
+    fp32 round-off).
 
     ``with_health=True`` adds a tiny non-aliased ``[E, 1]`` int32 output
     riding the same flush: each (e, ob) epilogue OR-reduces
-    ``isfinite`` over the post-momentum update tile (and the bias
-    update for biased layers) and accumulates one count into unit e's
-    slot — the in-kernel divergence detector (one VMEM compare per
-    tile; the gradient still never materializes in HBM).  health[e] > 0
-    means unit e wrote at least one non-finite parameter tile this
-    step."""
+    ``isfinite`` over the accumulator tiles it just wrote (both m and v
+    for Adam, and the bias update for biased layers) and accumulates one
+    count into unit e's slot — the in-kernel divergence detector (one
+    VMEM compare per tile; the gradient still never materializes in
+    HBM).  health[e] > 0 means unit e wrote at least one non-finite
+    parameter tile this step."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dy.shape[2] // nob
     has_res = act != "none"
     has_mom = mom is not None
+    has_vel = vel is not None
+    assert not has_vel or has_mom, "Adam (vel) requires the mom slot too"
+    assert not (has_vel and with_bias) or vel_b is not None
+    hyp = normalize_hyp(hyp, E)
     if bm is None:
         bm = bwd_bm(M, kb + 3, bs, x.dtype.itemsize)
     assert M % bm == 0
@@ -847,15 +970,21 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
         pos += 1
         mom_ref = refs[pos] if has_mom else None
         pos += int(has_mom)
+        vel_ref = refs[pos] if has_vel else None
+        pos += int(has_vel)
         b_ref = refs[pos] if with_bias else None
         pos += int(with_bias)
         mom_b_ref = refs[pos] if (has_mom and with_bias) else None
         pos += int(has_mom and with_bias)
+        vel_b_ref = refs[pos] if (has_vel and with_bias) else None
+        pos += int(has_vel and with_bias)
         outs = list(refs[pos:])
         new_w_ref = outs.pop(0)
         new_mom_ref = outs.pop(0) if has_mom else None
+        new_vel_ref = outs.pop(0) if has_vel else None
         new_b_ref = outs.pop(0) if with_bias else None
         new_mom_b_ref = outs.pop(0) if (has_mom and with_bias) else None
+        new_vel_b_ref = outs.pop(0) if (has_vel and with_bias) else None
         health_ref = outs.pop(0) if with_health else None
         if with_bias:
             accw_ref, accb_ref = outs
@@ -893,23 +1022,30 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
 
         @pl.when(m == nm - 1)
         def _apply():
-            lr = hyp_ref[e, 0]
-            mv = accw_ref[...]
+            def h(col):
+                return hyp_ref[e, col]
+
+            new_w32, nmv, nvv, ok = _epilogue_step(
+                h, accw_ref[...], w_ref[0, 0].astype(jnp.float32),
+                mom_ref[0, 0] if has_mom else None,
+                vel_ref[0, 0] if has_vel else None, with_health)
             if has_mom:
-                mv = hyp_ref[e, 1] * mom_ref[0, 0] + mv
-                new_mom_ref[0, 0] = mv
-            new_w_ref[0, 0] = (w_ref[0, 0].astype(jnp.float32)
-                               - lr * mv).astype(new_w_ref.dtype)
-            ok = jnp.all(jnp.isfinite(mv)) if with_health else None
+                new_mom_ref[0, 0] = nmv
+            if has_vel:
+                new_vel_ref[0, 0] = nvv
+            new_w_ref[0, 0] = new_w32.astype(new_w_ref.dtype)
             if with_bias:
-                mbv = accb_ref[...]
+                new_b32, nmb, nvb, okb = _epilogue_step(
+                    h, accb_ref[...], b_ref[...].astype(jnp.float32),
+                    mom_b_ref[...] if has_mom else None,
+                    vel_b_ref[...] if has_vel else None, with_health)
                 if has_mom:
-                    mbv = hyp_ref[e, 1] * mom_b_ref[...] + mbv
-                    new_mom_b_ref[...] = mbv
-                new_b_ref[...] = (b_ref[...].astype(jnp.float32)
-                                  - lr * mbv).astype(new_b_ref.dtype)
+                    new_mom_b_ref[...] = nmb
+                if has_vel:
+                    new_vel_b_ref[...] = nvb
+                new_b_ref[...] = new_b32.astype(new_b_ref.dtype)
                 if with_health:
-                    ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(mbv)))
+                    ok = jnp.logical_and(ok, okb)
             if with_health:
                 health_ref[0, 0] += jnp.where(ok, 0, 1).astype(jnp.int32)
 
@@ -941,10 +1077,14 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
     alias_io(w, wspec)
     if has_mom:
         alias_io(mom, wspec)
+    if has_vel:
+        alias_io(vel, wspec)
     if with_bias:
         alias_io(b, bspec)
         if has_mom:
             alias_io(mom_b, bspec)
+        if has_vel:
+            alias_io(vel_b, bspec)
     if with_health:
         # non-aliased [E, 1] detector output: one slot per unit, revisited
         # across every (ob, m) step of that unit
@@ -971,28 +1111,36 @@ def update_dw(x, dy, idx, res, w, b, mom, mom_b, hyp, *, act: str = "none",
     outs = list(outs)
     new_w = outs.pop(0)
     new_mom = outs.pop(0) if has_mom else None
+    new_vel = outs.pop(0) if has_vel else None
     new_b = outs.pop(0) if with_bias else None
     new_mom_b = outs.pop(0) if (has_mom and with_bias) else None
+    new_vel_b = outs.pop(0) if (has_vel and with_bias) else None
     health = outs.pop(0) if with_health else None
-    return new_w, new_b, new_mom, new_mom_b, health
+    return new_w, new_b, new_mom, new_mom_b, new_vel, new_vel_b, health
 
 
-def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
-                    bm: int | None = None, with_health: bool = False,
-                    interpret: bool = False):
+def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *, vg=None,
+                    vi=None, bm: int | None = None,
+                    with_health: bool = False, interpret: bool = False):
     """Fused BP+UP for the gated junction: both branch gradients reduce
     into VMEM scratch exactly as in ``gated_dw`` and the flush epilogue
-    applies the SGD(+momentum) update to BOTH weight streams in place —
-    returns ``(new_wg, new_wi, new_mg, new_mi, health)`` (momenta None
-    for plain SGD), all parameter outputs aliased to their inputs.  hyp
-    is the per-unit ``[E, 2]`` [lr, momentum] table, row ``e`` read in
-    the epilogue.  ``with_health=True`` appends the non-aliased ``[E, 1]``
+    applies the optimizer update to BOTH weight streams in place —
+    returns ``(new_wg, new_wi, new_mg, new_mi, new_vg, new_vi, health)``
+    (absent slots None), all parameter outputs aliased to their inputs.
+    hyp is the per-unit ``[E, HYP_K]`` table (any shape ``normalize_hyp``
+    accepts), row ``e`` read in the epilogue; the slots select the
+    optimizer statically — mg/mi alone → SGD(+momentum), plus vg/vi →
+    Adam.  ``with_health=True`` appends the non-aliased ``[E, 1]``
     int32 divergence detector (see ``update_dw``): the epilogue checks
     BOTH branch update tiles for non-finites."""
     E, M, _ = x.shape
     nob, kb = idx.shape
     bs = dh.shape[2] // nob
     has_mom = mg is not None
+    has_vel = vg is not None
+    assert not has_vel or (has_mom and vi is not None), \
+        "Adam (vg/vi) requires the mg/mi slots too"
+    hyp = normalize_hyp(hyp, E)
     if bm is None:
         bm = bwd_bm(M, kb + 5, bs, x.dtype.itemsize)
     assert M % bm == 0
@@ -1006,12 +1154,18 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
         if has_mom:
             mg_ref, mi_ref = refs[pos], refs[pos + 1]
             pos += 2
+        if has_vel:
+            vg_ref, vi_ref = refs[pos], refs[pos + 1]
+            pos += 2
         outs = list(refs[pos:])
         new_wg_ref = outs.pop(0)
         new_wi_ref = outs.pop(0)
         if has_mom:
             new_mg_ref = outs.pop(0)
             new_mi_ref = outs.pop(0)
+        if has_vel:
+            new_vg_ref = outs.pop(0)
+            new_vi_ref = outs.pop(0)
         health_ref = outs.pop(0) if with_health else None
         accg_ref, accu_ref = outs
         e = pl.program_id(0)
@@ -1042,21 +1196,27 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
 
         @pl.when(m == nm - 1)
         def _apply():
-            lr = hyp_ref[e, 0]
-            mgv = accg_ref[...]
-            miv = accu_ref[...]
+            def h(col):
+                return hyp_ref[e, col]
+
+            new_g32, nmg, nvg, okg = _epilogue_step(
+                h, accg_ref[...], wg_ref[0, 0].astype(jnp.float32),
+                mg_ref[0, 0] if has_mom else None,
+                vg_ref[0, 0] if has_vel else None, with_health)
+            new_i32, nmi, nvi, oki = _epilogue_step(
+                h, accu_ref[...], wi_ref[0, 0].astype(jnp.float32),
+                mi_ref[0, 0] if has_mom else None,
+                vi_ref[0, 0] if has_vel else None, with_health)
             if has_mom:
-                mgv = hyp_ref[e, 1] * mg_ref[0, 0] + mgv
-                miv = hyp_ref[e, 1] * mi_ref[0, 0] + miv
-                new_mg_ref[0, 0] = mgv
-                new_mi_ref[0, 0] = miv
-            new_wg_ref[0, 0] = (wg_ref[0, 0].astype(jnp.float32)
-                                - lr * mgv).astype(new_wg_ref.dtype)
-            new_wi_ref[0, 0] = (wi_ref[0, 0].astype(jnp.float32)
-                                - lr * miv).astype(new_wi_ref.dtype)
+                new_mg_ref[0, 0] = nmg
+                new_mi_ref[0, 0] = nmi
+            if has_vel:
+                new_vg_ref[0, 0] = nvg
+                new_vi_ref[0, 0] = nvi
+            new_wg_ref[0, 0] = new_g32.astype(new_wg_ref.dtype)
+            new_wi_ref[0, 0] = new_i32.astype(new_wi_ref.dtype)
             if with_health:
-                ok = jnp.logical_and(jnp.all(jnp.isfinite(mgv)),
-                                     jnp.all(jnp.isfinite(miv)))
+                ok = jnp.logical_and(okg, oki)
                 health_ref[0, 0] += jnp.where(ok, 0, 1).astype(jnp.int32)
 
     row = pl.BlockSpec((1, bm, bs), lambda e, o, m, *_: (e, m, o))
@@ -1083,6 +1243,9 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
     if has_mom:
         alias_io(mg)
         alias_io(mi)
+    if has_vel:
+        alias_io(vg)
+        alias_io(vi)
     if with_health:
         out_specs.append(pl.BlockSpec((1, 1), lambda e, o, m, *_: (e, 0)))
         out_shape.append(jax.ShapeDtypeStruct((E, 1), jnp.int32))
@@ -1106,5 +1269,7 @@ def update_gated_dw(x, dh, idx, g, u, wg, wi, mg, mi, hyp, *,
     new_wi = outs.pop(0)
     new_mg = outs.pop(0) if has_mom else None
     new_mi = outs.pop(0) if has_mom else None
+    new_vg = outs.pop(0) if has_vel else None
+    new_vi = outs.pop(0) if has_vel else None
     health = outs.pop(0) if with_health else None
-    return new_wg, new_wi, new_mg, new_mi, health
+    return new_wg, new_wi, new_mg, new_mi, new_vg, new_vi, health

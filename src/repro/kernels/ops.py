@@ -151,16 +151,19 @@ _junction_core.defvjp(_junction_fwd, _junction_bwd)
 
 # ------------------------------------------------- fused BP+UP custom_vjp
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _junction_update_core(spec, x, ws, b, moms, mom_b, hyp, health, idx,
-                          rev_ob, rev_t, rev_cnt):
+def _junction_update_core(spec, x, ws, b, moms, mom_b, vels, vel_b, hyp,
+                          health, idx, rev_ob, rev_t, rev_cnt):
     """Forward identical to _junction_core; the vjp's cotangents for the
-    parameter operands are the SGD(+momentum)-UPDATED values computed by
-    the fused update_dw kernels (kernels/block_sparse_matmul.py) — the
-    paper's concurrent BP+UP pipeline.  moms is a tuple mirroring ws
-    (empty for plain SGD), mom_b a 0/1-tuple, hyp the per-unit [E, 2]
-    f32 [lr, momentum] table.  The weight gradient never materializes in
-    HBM: it lives in VMEM scratch and is consumed by the in-kernel
-    update, whose outputs alias the parameter inputs.
+    parameter operands are the optimizer-UPDATED values computed by the
+    fused update_dw kernels (kernels/block_sparse_matmul.py) — the
+    paper's concurrent BP+UP pipeline.  moms/vels are accumulator-slot
+    tuples mirroring ws (both empty = plain SGD, moms alone =
+    SGD+momentum, both = Adam m/v — the kernels' static slot switch),
+    mom_b/vel_b the matching 0/1-tuples for the bias, hyp the per-unit
+    [E, HYP_K] f32 table of the kernel module's column registry.  The
+    weight gradient never materializes in HBM: it lives in VMEM scratch
+    and is consumed by the in-kernel update, whose outputs alias the
+    parameter inputs.
 
     ``health`` is a dummy f32 [E] operand riding the same cotangent
     channel: when ``spec.with_health`` the update kernels' non-aliased
@@ -172,40 +175,50 @@ def _junction_update_core(spec, x, ws, b, moms, mom_b, hyp, health, idx,
     return y
 
 
-def _junction_update_fwd(spec, x, ws, b, moms, mom_b, hyp, health, idx,
-                         rev_ob, rev_t, rev_cnt):
+def _junction_update_fwd(spec, x, ws, b, moms, mom_b, vels, vel_b, hyp,
+                         health, idx, rev_ob, rev_t, rev_cnt):
     y, res = _fwd_call(spec, x, ws, b, idx, save=True)
-    return y, (x, ws, b, res, moms, mom_b, hyp, idx, rev_ob, rev_t, rev_cnt)
+    return y, (x, ws, b, res, moms, mom_b, vels, vel_b, hyp, idx, rev_ob,
+               rev_t, rev_cnt)
 
 
 def _junction_update_bwd(spec, saved, dy):
-    x, ws, b, res, moms, mom_b, hyp, idx, rev_ob, rev_t, rev_cnt = saved
+    (x, ws, b, res, moms, mom_b, vels, vel_b, hyp, idx, rev_ob, rev_t,
+     rev_cnt) = saved
     dxv = _dx_call(spec, ws, res, dy, rev_ob, rev_t, rev_cnt)
     if spec.gated:
         g, u = res
-        nwg, nwi, nmg, nmi, flags = bsm.update_gated_dw(
+        nwg, nwi, nmg, nmi, nvg, nvi, flags = bsm.update_gated_dw(
             x, dy, idx, g, u, ws[0], ws[1],
             moms[0] if moms else None, moms[1] if moms else None,
-            hyp, with_health=spec.with_health, interpret=spec.interpret)
+            hyp, vg=vels[0] if vels else None,
+            vi=vels[1] if vels else None,
+            with_health=spec.with_health, interpret=spec.interpret)
         new_ws = (nwg, nwi)
         new_moms = (nmg, nmi) if moms else ()
+        new_vels = (nvg, nvi) if vels else ()
         new_b = jnp.zeros_like(b)    # gated junctions carry no bias
         new_mom_b = ()
+        new_vel_b = ()
     else:
-        nw, nb, nm, nmb, flags = bsm.update_dw(
+        nw, nb, nm, nmb, nv, nvb, flags = bsm.update_dw(
             x, dy, idx, res, ws[0], b if spec.has_bias else None,
             moms[0] if moms else None,
             mom_b[0] if mom_b else None,
-            hyp, act=spec.act, with_bias=spec.has_bias,
+            hyp, vel=vels[0] if vels else None,
+            vel_b=vel_b[0] if vel_b else None,
+            act=spec.act, with_bias=spec.has_bias,
             with_health=spec.with_health, interpret=spec.interpret)
         new_ws = (nw,)
         new_moms = (nm,) if moms else ()
+        new_vels = (nv,) if vels else ()
         new_b = nb if spec.has_bias else jnp.zeros_like(b)
         new_mom_b = (nmb,) if mom_b else ()
+        new_vel_b = (nvb,) if vel_b else ()
     d_health = (flags.reshape(spec.E).astype(jnp.float32)
                 if spec.with_health else jnp.zeros((spec.E,), jnp.float32))
-    return (dxv, new_ws, new_b, new_moms, new_mom_b, jnp.zeros_like(hyp),
-            d_health, None, None, None, None)
+    return (dxv, new_ws, new_b, new_moms, new_mom_b, new_vels, new_vel_b,
+            jnp.zeros_like(hyp), d_health, None, None, None, None)
 
 
 _junction_update_core.defvjp(_junction_update_fwd, _junction_update_bwd)
@@ -282,33 +295,37 @@ def _pad_junction_rows(x, bm):
 
 def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
                           wi=None, bias=None, act: str = "none",
-                          mom=None, mom_wi=None, mom_b=None, health=None,
+                          mom=None, mom_wi=None, mom_b=None, vel=None,
+                          vel_wi=None, vel_b=None, health=None,
                           interpret: bool | None = None,
                           bm: int | None = None, bn: int | None = None):
     """The fused BP+UP junction — forward y = act(x @ W_sparse + bias)
     exactly like ``junction_matmul``, but the custom_vjp's cotangents for
-    the parameter operands (w / wi / bias and their momentum buffers) are
-    the SGD(+momentum)-UPDATED values: the backward runs BP through the
+    the parameter operands (w / wi / bias and their accumulator slots)
+    are the optimizer-UPDATED values: the backward runs BP through the
     in-kernel-DMA ``dx`` kernels against the OLD weights, reduces the
-    weight gradient into VMEM scratch, and applies
-
-        mom' = hyp[1] * mom + dw        (fp32)
-        w'   = (w - hyp[0] * mom').astype(w.dtype)
-
-    in the same kernel epilogue, writing w'/mom' through
+    weight gradient into VMEM scratch, and applies the optimizer update
+    in the same kernel epilogue, writing the new params/slots through
     ``input_output_aliasing`` — ``dw`` never materializes in HBM (the
     paper's concurrent edge-processor UP stage).  A fused train step
     treats these cotangents as the new parameters (train/steps.py);
-    ``optim.fused_sgd`` adopts them and tree-maps the dense leaves.
+    ``optim.FusedOptimizer.merge`` adopts them and tree-maps the dense
+    leaves.
 
-    hyp: ``[lr, momentum]`` as a (2,) f32 pair shared by every junction
-    unit, OR — for 5-D expert-batched weights — a per-unit ``[E, 2]``
-    table so each unit trains under its own hyperparameters in the same
-    launch (the population-search contract: E candidate networks sharing
-    one pattern, one kernel grid, E distinct learning rates).  Streamed
-    through scalar prefetch; the update epilogue reads row
-    ``program_id(0)``.  mom/mom_wi/mom_b: fp32 momentum accumulators
-    matching w/wi/bias (all None → plain SGD).
+    hyp: a hyperparameter row shared by every junction unit — the legacy
+    ``[lr, momentum]`` (2,) pair or the full ``(HYP_K,)`` registry row —
+    OR, for 5-D expert-batched weights, a per-unit ``[E, 2]`` /
+    ``[E, HYP_K]`` table so each unit trains under its own
+    hyperparameters in the same launch (the population-search contract:
+    E candidate networks sharing one pattern, one kernel grid, E
+    distinct hyperparameter rows).  Normalized by
+    ``kernels.block_sparse_matmul.normalize_hyp`` and streamed through
+    scalar prefetch; the update epilogue reads row ``program_id(0)``.
+
+    The accumulator slots select the optimizer statically (the kernel
+    module's slot layout): mom/mom_wi/mom_b alone → SGD(+momentum),
+    plus vel/vel_wi/vel_b → Adam (first/second moments m, v); all slots
+    fp32 even for bf16 params, all None → plain SGD.
 
     health: optional f32 zeros of shape ``(E,)`` (``(1,)`` for a single
     4-D junction) switching on the in-kernel divergence detector — the
@@ -333,30 +350,37 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
             "mixed-precision casts")
     if (mom is None) != (mom_wi is None) and gated:
         raise ValueError("gated junction needs momentum for both branches")
-    for name, m in (("mom", mom), ("mom_wi", mom_wi), ("mom_b", mom_b)):
+    if (vel is None) != (vel_wi is None) and gated:
+        raise ValueError("gated junction needs the Adam v slot for both "
+                         "branches")
+    if vel is not None and mom is None:
+        raise ValueError("the Adam vel slot requires the mom slot too "
+                         "(slot layout: w, mom, vel)")
+    for name, m in (("mom", mom), ("mom_wi", mom_wi), ("mom_b", mom_b),
+                    ("vel", vel), ("vel_wi", vel_wi), ("vel_b", vel_b)):
         if m is not None and m.dtype != jnp.float32:
             raise ValueError(f"{name} must be an fp32 accumulator "
-                             f"(got {m.dtype}) — the momentum state stays "
+                             f"(got {m.dtype}) — the optimizer state stays "
                              "full-precision even for bf16 params")
-    hyp = jnp.asarray(hyp, jnp.float32)
     single, lead, x3, w5, wi5, b2, E, M, nob, bs, bm, bn = _prep_junction(
         x, w, wi, bias, bm, bn, gated)
-    if hyp.shape == (2,):
-        # one shared pair -> every unit's row of the per-unit table
-        hyp = jnp.broadcast_to(hyp, (E, 2))
-    elif hyp.shape != (E, 2):
-        raise ValueError(
-            f"hyp must be the [lr, momentum] pair or a per-unit [E={E}, 2] "
-            f"table, got {hyp.shape}")
+    hyp = bsm.normalize_hyp(hyp, E)
     b = jnp.zeros((E, nob * bs), x.dtype) if b2 is None else b2
     ws = (w5, wi5) if gated else (w5,)
-    if mom is not None:
-        mom5 = mom[None] if single else mom
-        moms = (mom5, mom_wi[None] if single else mom_wi) if gated else (mom5,)
-        mom_b_t = () if (mom_b is None or bias is None) else (
-            (mom_b[None] if single else mom_b),)
-    else:
-        moms, mom_b_t = (), ()
+
+    def _slots(sw, swi, sb):
+        """Lift one accumulator-slot family (w slot, gated wi slot, bias
+        slot) to the core's tuples, adding the E=1 axis for 4-D calls."""
+        if sw is None:
+            return (), ()
+        sw5 = sw[None] if single else sw
+        t = (sw5, swi[None] if single else swi) if gated else (sw5,)
+        tb = () if (sb is None or bias is None) else (
+            (sb[None] if single else sb),)
+        return t, tb
+
+    moms, mom_b_t = _slots(mom, mom_wi, mom_b)
+    vels, vel_b_t = _slots(vel, vel_wi, vel_b)
     with_health = health is not None
     if with_health:
         health = jnp.asarray(health, jnp.float32).reshape(-1)
@@ -369,8 +393,8 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
     spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
                       has_bias=bias is not None, interpret=interpret,
                       with_health=with_health)
-    y = _junction_update_core(spec, x3, ws, b, moms, mom_b_t, hyp, health,
-                              idx, rev_ob, rev_t, rev_cnt)
+    y = _junction_update_core(spec, x3, ws, b, moms, mom_b_t, vels, vel_b_t,
+                              hyp, health, idx, rev_ob, rev_t, rev_cnt)
     y = y[:, :M]
     return y.reshape(*lead, nob * bs) if single else y
 

@@ -1,8 +1,14 @@
-"""Population-sweep driver: a density x lr grid on MNIST, end to end.
+"""Population-sweep driver: a hyperparameter grid on MNIST, end to end.
 
     PYTHONPATH=src python -m repro.launch.sweep \
         --densities 0.25,0.5 --lrs 0.02,0.05,0.1 --rounds 3 \
         --steps-per-round 20 --out SWEEP_mnist.json
+
+The default grid is density x lr under SGD; ``--optim adam`` switches
+every member to the in-kernel Adam epilogue and opens the ``--b1s`` /
+``--wds`` axes (grid = density x lr x b1 x wd, with per-member rows in
+the ``[E, HYP_K]`` hyp table).  One optimizer kind per sweep — the
+accumulator-slot layout is structural.
 
 Builds the candidate grid, buckets it into same-structure cohorts
 (candidates sharing a quantized fan-in train as ONE E-batched
@@ -25,6 +31,13 @@ def _parse():
     ap.add_argument("--densities", default="0.25,0.5", metavar="D1,D2,...")
     ap.add_argument("--lrs", default="0.02,0.05,0.1", metavar="L1,L2,...")
     ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--optim", choices=("sgd", "adam"), default="sgd",
+                    help="per-member update rule (one kind per sweep: the "
+                         "slot layout is structural)")
+    ap.add_argument("--b1s", default="0.9", metavar="B1,B2,...",
+                    help="Adam b1 sweep axis (--optim adam only)")
+    ap.add_argument("--wds", default="0.0", metavar="W1,W2,...",
+                    help="Adam weight-decay sweep axis (--optim adam only)")
     ap.add_argument("--hidden", type=int, default=512)
     ap.add_argument("--block", type=int, default=128)
     ap.add_argument("--rounds", type=int, default=3)
@@ -53,12 +66,25 @@ def main():
     # output width = smallest block multiple holding the 32 padded classes
     out_w = -(-32 // args.block) * args.block
     layers = (1024, args.hidden, out_w)
-    specs = [CandidateSpec(lr=lr, momentum=args.momentum, density=d,
-                           layers=layers, block=args.block,
-                           init_seed=i)
-             for i, (d, lr) in enumerate(
-                 (d, lr) for d in _floats(args.densities)
-                 for lr in _floats(args.lrs))]
+    if args.optim == "adam":
+        # adam grid: density x lr x b1 x wd (momentum field carries b1)
+        grid = [(d, lr, b1, wd)
+                for d in _floats(args.densities)
+                for lr in _floats(args.lrs)
+                for b1 in _floats(args.b1s)
+                for wd in _floats(args.wds)]
+        specs = [CandidateSpec(lr=lr, momentum=b1, opt="adam",
+                               weight_decay=wd, density=d,
+                               layers=layers, block=args.block,
+                               init_seed=i)
+                 for i, (d, lr, b1, wd) in enumerate(grid)]
+    else:
+        specs = [CandidateSpec(lr=lr, momentum=args.momentum, density=d,
+                               layers=layers, block=args.block,
+                               init_seed=i)
+                 for i, (d, lr) in enumerate(
+                     (d, lr) for d in _floats(args.densities)
+                     for lr in _floats(args.lrs))]
 
     n = args.samples + args.eval_samples
     x, t, _ = paper_dataset(n=n, seed=args.seed)
@@ -71,9 +97,16 @@ def main():
                       eval_samples=args.eval_samples,
                       seed=args.seed, engine=args.engine)
     n_cohorts = len(bucket(specs))
+    # resolved ONCE, same rule as search.population.make_population_step:
+    # the in-kernel per-member update needs the pallas engine
+    from repro.core.sparse_linear import resolve_engine
+    eng = resolve_engine(cfg.engine)
+    path = ("fused BP+UP" if cfg.fused and eng == "pallas"
+            else "two-pass (materialized grads)")
     print(f"[sweep] {len(specs)} candidates in {n_cohorts} cohort(s), "
           f"{cfg.rounds} rounds x {cfg.steps_per_round} steps, "
-          f"engine={cfg.engine}")
+          f"engine={eng}")
+    print(f"[sweep] optim={args.optim} update path: {path}")
     result = run_sweep(specs, x_train, t_train, x_eval, t_eval, cfg,
                        tag=args.tag)
     led = result.ledger
@@ -87,9 +120,11 @@ def main():
                   f"quarantined@r{m.quarantined_at['round']}"
                   if m.quarantined_at is not None else
                   f"pruned@r{m.pruned_at}")
-        print(f"[sweep]   member {m.member}: density="
-              f"{m.config['density']} lr={m.config['lr']} "
-              f"eval={ev} {status}")
+        hyps = f"density={m.config['density']} lr={m.config['lr']}"
+        if m.config.get("opt") == "adam":
+            hyps += (f" b1={m.config['momentum']} "
+                     f"wd={m.config['weight_decay']}")
+        print(f"[sweep]   member {m.member}: {hyps} eval={ev} {status}")
     w = led.winner()
     if w is None:
         import math
@@ -101,9 +136,11 @@ def main():
                              "diverged (non-finite eval loss) — lower the "
                              "lr grid")
         raise SystemExit("[sweep] no winner — sweep ran no rounds?")
-    print(f"[sweep] winner: density={w.config['density']} "
-          f"lr={w.config['lr']} eval_loss={w.eval_losses[-1]:.5f} "
-          f"-> {args.out}")
+    whyp = f"density={w.config['density']} lr={w.config['lr']}"
+    if w.config.get("opt") == "adam":
+        whyp += f" b1={w.config['momentum']} wd={w.config['weight_decay']}"
+    print(f"[sweep] winner: {whyp} "
+          f"eval_loss={w.eval_losses[-1]:.5f} -> {args.out}")
     return result
 
 

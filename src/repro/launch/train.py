@@ -27,6 +27,10 @@ def _parse():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optim", choices=("sgd", "adam"), default="adam",
+                    help="fused-capable optimizer: fused_sgd(momentum=0.9) "
+                         "or fused_adam (two-pass adam reference when the "
+                         "config is ineligible)")
     ap.add_argument("--sparse", action="store_true",
                     help="enable the paper's pre-defined sparsity on FFNs")
     ap.add_argument("--density", type=float, default=0.25)
@@ -57,11 +61,11 @@ def main():
     from repro.data.pipeline import LMTokenPipeline
     from repro.launch.mesh import make_local_mesh
     from repro.models import model as M
-    from repro.optim import adam, cosine_schedule
+    from repro.optim import cosine_schedule, fused_adam, fused_sgd
     from repro.parallel import hints
     from repro.parallel import sharding as sh
     from repro.train import grad_compress
-    from repro.train.steps import make_train_step
+    from repro.train.steps import fused_update_eligible, make_train_step
     from repro.train.train_loop import TrainLoopConfig, run
 
     cfg = registry.get(args.arch)
@@ -78,9 +82,19 @@ def main():
         cfg = cfg.with_sparsity(SparsityConfig(density=args.density,
                                                block=block, where="ffn"))
 
-    opt = adam(cosine_schedule(args.lr, warmup=20, total=args.steps))
+    sched = cosine_schedule(args.lr, warmup=20, total=args.steps)
+    if args.optim == "sgd":
+        opt = fused_sgd(sched, momentum=0.9)
+    else:
+        opt = fused_adam(sched, grad_clip=1.0)
     if args.compress_grads:
         opt = grad_compress.compressed(opt)
+
+    # resolved ONCE at step build — say which path we're on (and why not,
+    # when the fused BP+UP refuses) so runs are attributable
+    ok, why = fused_update_eligible(cfg, opt, args.microbatches)
+    print(f"[train] optim={args.optim} update path: "
+          f"{'fused BP+UP' if ok else f'two-pass ({why})'}")
 
     params = M.init(cfg, jax.random.PRNGKey(0))
     opt_state = opt.init(params)

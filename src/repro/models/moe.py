@@ -125,8 +125,9 @@ def _expert_ffn_pallas(p: Params, xd, E: int):
     E-batched configuration.  When the fused-update context rides in the
     params dict (train/steps.py injection), both junctions run through
     ``junction_train_update`` instead: the per-expert weight gradients
-    are consumed by the in-kernel SGD(+momentum) update and the updated
-    wg/wi/wo come back as their cotangents."""
+    are consumed by the in-kernel optimizer epilogue (SGD+momentum, or
+    Adam when the vel_* slots ride along) and the updated wg/wi/wo come
+    back as their cotangents."""
     from repro.kernels import ops  # local import: kernels optional at runtime
     G, _, C, D = xd.shape
     xe = jnp.moveaxis(xd, 1, 0).reshape(E, G * C, D)
@@ -136,11 +137,12 @@ def _expert_ffn_pallas(p: Params, xd, E: int):
             xe, p["wg"], p["idx_in"],
             p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"], wi=p["wi"],
             hyp=hyp, mom=p.get("mom_wg"), mom_wi=p.get("mom_wi"),
+            vel=p.get("vel_wg"), vel_wi=p.get("vel_wi"),
             health=p.get("upd_health_in"))
         ye = ops.junction_train_update(
             h, p["wo"], p["idx_out"],
             p["rev_out_ob"], p["rev_out_t"], p["rev_out_cnt"],
-            hyp=hyp, mom=p.get("mom_wo"),
+            hyp=hyp, mom=p.get("mom_wo"), vel=p.get("vel_wo"),
             health=p.get("upd_health_out"))
         return jnp.moveaxis(ye.reshape(E, G, C, -1), 0, 1)
     h = ops.junction_matmul(

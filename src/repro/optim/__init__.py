@@ -1,4 +1,6 @@
-from repro.optim.optimizers import (FusedSGD, Optimizer, adam, fused_sgd,
-                                    sgd, clip_by_global_norm, trainable_mask)
+from repro.optim.optimizers import (FusedAdam, FusedOptimizer, FusedSGD,
+                                    Optimizer, adam, fused_adam, fused_sgd,
+                                    sgd, clip_by_global_norm,
+                                    global_norm_scale, trainable_mask)
 from repro.optim.schedule import (paper_halving_schedule, cosine_schedule,
                                   constant_schedule)

@@ -29,10 +29,18 @@ class Optimizer:
     # update(grads, state, params, step) -> (new_params, new_state)
 
 
-def clip_by_global_norm(grads, max_norm: float):
+def global_norm_scale(grads, max_norm: float):
+    """(scale, global_norm) of the trainable leaves — THE clip formula,
+    shared by ``clip_by_global_norm`` (two-pass) and the fused path's
+    norm pre-pass (train/steps.py folds ``scale`` into the hyp table's
+    gs column), so the two paths can never drift."""
     leaves = [g for g in jax.tree.leaves(grads) if _is_trainable(g)]
     gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
-    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jnp.minimum(1.0, max_norm / (gn + 1e-9)), gn
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    scale, gn = global_norm_scale(grads, max_norm)
     return jax.tree.map(
         lambda g: g * scale if _is_trainable(g) else g, grads), gn
 
@@ -52,79 +60,145 @@ def sgd(lr_fn: Callable[[jax.Array], jax.Array]) -> Optimizer:
 
 
 @dataclasses.dataclass(frozen=True)
-class FusedSGD(Optimizer):
-    """SGD(+momentum) that can run fused with the backward pass.
+class FusedOptimizer(Optimizer):
+    """Contract of an optimizer that can run fused with the backward pass.
 
-    ``update`` is the ordinary TWO-PASS reference (clip → momentum →
-    apply, tree-mapped over materialized gradients) — the path the jnp
-    engine, dry-run and any ineligible config use.  A fused train step
-    (train/steps.py, behind ``ArchConfig.fused_update``) instead injects
-    ``hyp(step)`` + the momentum buffers into the junction dicts before
-    differentiating, lets the ``junction_train_update`` kernels apply the
-    update in the backward epilogue, and calls :meth:`merge` to adopt the
-    updated junction leaves and tree-map only the dense remainder.
-    ``grad_clip`` is incompatible with fusing (it needs the full gradient
-    tree first) — setting it forces the two-pass path.
+    ``update`` is always the ordinary TWO-PASS reference (tree-mapped over
+    materialized gradients) — the path the jnp engine, dry-run and any
+    ineligible config use.  A fused train step (train/steps.py, behind
+    ``ArchConfig.fused_update``) instead:
+
+      1. streams :meth:`hyp`'s ``(HYP_K,)`` registry row ([lr, b1, b2,
+         eps, wd, t, gs] — ``kernels/block_sparse_matmul.HYP_COLS``) into
+         the update kernels via scalar prefetch,
+      2. injects :meth:`slots`' accumulator trees into the junction dicts
+         (core/sparse_linear.inject_update_ctx) before differentiating,
+         so the backward epilogue updates weights + slots in place, and
+      3. calls :meth:`merge` to adopt the updated junction leaves and
+         tree-map the same reference formula over the dense remainder.
+
+    Subclasses define ``slot_keys`` (which state entries are in-kernel
+    accumulators, in the kernels' slot order), ``hyp``, and ``_dense_fn``
+    (the per-leaf reference step).  ``grad_clip`` no longer forces the
+    two-pass path: steps.py runs a norm pre-pass and folds the clip scale
+    into the hyp row's gs column (and into ``merge``'s ``grad_scale``).
     """
     lr_fn: Callable[[jax.Array], jax.Array] = None
-    momentum: float = 0.0
     grad_clip: float | None = None
 
-    def hyp(self, step) -> jax.Array:
-        """The (2,)-f32 [lr, momentum] operand the update kernels stream
-        through scalar prefetch."""
-        lr = jnp.asarray(self.lr_fn(step), jnp.float32)
-        return jnp.stack([lr, jnp.asarray(self.momentum, jnp.float32)])
+    def slot_keys(self) -> tuple[str, ...]:
+        """State keys holding in-kernel accumulator trees, in the
+        kernels' slot order (slot 0 = SGD momentum / Adam m, ...)."""
+        raise NotImplementedError
 
-    def merge(self, grads, state, params, step, lr_scale=None):
+    def slots(self, state) -> tuple:
+        """The accumulator trees to inject, kernel slot order."""
+        return tuple(state[k] for k in self.slot_keys())
+
+    def hyp(self, step) -> jax.Array:
+        """The (HYP_K,)-f32 registry row the update kernels stream
+        through scalar prefetch."""
+        raise NotImplementedError
+
+    def _dense_fn(self, step, lr_scale, grad_scale):
+        """leaf(p, g, slot_vals) -> (p', *slot_vals') — the reference
+        update applied to non-junction trainable leaves in merge()."""
+        raise NotImplementedError
+
+    def merge(self, grads, state, params, step, lr_scale=None,
+              grad_scale=None):
         """Fused-step merge: ``grads`` is the cotangent tree of the
         *augmented* params (core/sparse_linear.inject_update_ctx) — its
-        junction weight/momentum leaves already ARE the updated values
-        (and its injected health leaves, absent from ``params``, are
-        skipped by construction); every other trainable leaf still
-        carries a real gradient and gets the same two-pass formula
-        applied here.  ``lr_scale`` (guardian backoff) must match the
-        factor already folded into the injected hyp table so dense and
-        junction leaves back off together."""
+        junction weight/slot leaves already ARE the updated values (and
+        its injected health leaves, absent from ``params``, are skipped
+        by construction); every other trainable leaf still carries a
+        real gradient and gets the same two-pass formula applied here.
+        ``lr_scale`` (guardian backoff) and ``grad_scale`` (global-norm
+        clip) must match the factors already folded into the injected
+        hyp table's lr / gs columns so dense and junction leaves move
+        together."""
         from repro.core import sparse_linear as sl
+        keys = self.slot_keys()
+        ms = tuple(state[k] for k in keys)
+        dense = self._dense_fn(step, lr_scale, grad_scale)
+        nslots = len(ms)
+
+        def rec(g, p, ms):
+            if isinstance(p, dict):
+                junction = sl.is_junction(p)
+                new_p = {}
+                new_ms = tuple({} for _ in range(nslots))
+                for k, v in p.items():
+                    mks = tuple(m[k] for m in ms)
+                    if isinstance(v, (dict, list, tuple)):
+                        out = rec(g[k], v, mks)
+                    elif (junction and k in sl.FUSED_MOM
+                          and _is_trainable(v)):
+                        # kernel already wrote param + slot buffers
+                        out = (g[k],) + tuple(
+                            g[names[k]]
+                            for names in sl.FUSED_SLOT_NAMES[:nslots])
+                    else:
+                        out = dense(v, g[k], mks)
+                    new_p[k] = out[0]
+                    for i in range(nslots):
+                        new_ms[i][k] = out[1 + i]
+                return (new_p,) + new_ms
+            if isinstance(p, (list, tuple)):
+                subs = [rec(g[i], v, tuple(m[i] for m in ms))
+                        for i, v in enumerate(p)]
+                return (type(p)(s[0] for s in subs),) + tuple(
+                    type(p)(s[1 + i] for s in subs)
+                    for i in range(nslots))
+            return dense(p, g, ms)
+
+        out = rec(grads, params, ms)
+        if not keys:
+            return out[0], state
+        new_state = dict(state)
+        for i, k in enumerate(keys):
+            new_state[k] = out[1 + i]
+        return out[0], new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSGD(FusedOptimizer):
+    """SGD(+momentum) on the :class:`FusedOptimizer` contract.
+
+    Reference semantics (what both paths compute, in fp32):
+        m' = momentum * m + gs * g
+        p' = (p - lr * m').astype(p.dtype)
+    """
+    momentum: float = 0.0
+
+    def slot_keys(self):
+        return ("mom",) if self.momentum else ()
+
+    def hyp(self, step) -> jax.Array:
+        from repro.kernels import block_sparse_matmul as bsm
+        lr = jnp.asarray(self.lr_fn(step), jnp.float32)
+        row = [jnp.float32(0.0)] * bsm.HYP_K
+        row[bsm.COL_LR] = lr
+        row[bsm.COL_B1] = jnp.float32(self.momentum)
+        row[bsm.COL_GS] = jnp.float32(1.0)
+        return jnp.stack(row)
+
+    def _dense_fn(self, step, lr_scale, grad_scale):
         lr = self.lr_fn(step)
         if lr_scale is not None:
             lr = lr * lr_scale
-        mom = state["mom"] if self.momentum else None
 
-        def dense(p, g, m):
+        def dense(p, g, ms):
             if not _is_trainable(p):
-                return p, m
+                return (p,) + ms
             mv = g.astype(jnp.float32)
+            if grad_scale is not None:
+                mv = grad_scale * mv
             if self.momentum:
-                mv = self.momentum * m + mv
-            return (p.astype(jnp.float32) - lr * mv).astype(p.dtype), mv
-
-        def rec(g, p, m):
-            if isinstance(p, dict):
-                junction = sl.is_junction(p)
-                new_p, new_m = {}, {}
-                for k, v in p.items():
-                    mk = m[k] if m is not None else None
-                    if isinstance(v, (dict, list, tuple)):
-                        new_p[k], new_m[k] = rec(g[k], v, mk)
-                    elif (junction and k in sl.FUSED_MOM
-                          and _is_trainable(v)):
-                        new_p[k] = g[k]                       # updated param
-                        new_m[k] = (g[sl.FUSED_MOM[k]]        # updated buffer
-                                    if m is not None else None)
-                    else:
-                        new_p[k], new_m[k] = dense(v, g[k], mk)
-                return new_p, new_m
-            if isinstance(p, (list, tuple)):
-                pairs = [rec(g[i], v, m[i] if m is not None else None)
-                         for i, v in enumerate(p)]
-                return (type(p)(a for a, _ in pairs),
-                        type(p)(b for _, b in pairs))
-            return dense(p, g, m)
-
-        new_params, new_mom = rec(grads, params, mom)
-        return new_params, ({"mom": new_mom} if self.momentum else state)
+                mv = self.momentum * ms[0] + mv
+                return (p.astype(jnp.float32) - lr * mv).astype(p.dtype), mv
+            return ((p.astype(jnp.float32) - lr * mv).astype(p.dtype),)
+        return dense
 
 
 def fused_sgd(lr_fn: Callable[[jax.Array], jax.Array], momentum: float = 0.0,
@@ -161,6 +235,74 @@ def fused_sgd(lr_fn: Callable[[jax.Array], jax.Array], momentum: float = 0.0,
         return new_params, state
     return FusedSGD(init=init, update=update, lr_fn=lr_fn,
                     momentum=momentum, grad_clip=grad_clip)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedAdam(FusedOptimizer):
+    """Adam on the :class:`FusedOptimizer` contract.
+
+    ``update`` delegates to the two-pass :func:`adam` — THE reference the
+    fused path must match.  Slot 0 is the first moment (m), slot 1 the
+    second (v), both fp32 even for bf16 params.  The hyp row carries the
+    per-step bias-correction time t = step + 1; weight decay is the
+    decoupled-into-the-step form ``step += wd * p`` the reference uses.
+    """
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def slot_keys(self):
+        return ("m", "v")
+
+    def hyp(self, step) -> jax.Array:
+        from repro.kernels import block_sparse_matmul as bsm
+        row = [jnp.float32(0.0)] * bsm.HYP_K
+        row[bsm.COL_LR] = jnp.asarray(self.lr_fn(step), jnp.float32)
+        row[bsm.COL_B1] = jnp.float32(self.b1)
+        row[bsm.COL_B2] = jnp.float32(self.b2)
+        row[bsm.COL_EPS] = jnp.float32(self.eps)
+        row[bsm.COL_WD] = jnp.float32(self.weight_decay)
+        row[bsm.COL_T] = jnp.asarray(step, jnp.float32) + 1.0
+        row[bsm.COL_GS] = jnp.float32(1.0)
+        return jnp.stack(row)
+
+    def _dense_fn(self, step, lr_scale, grad_scale):
+        lr = self.lr_fn(step)
+        if lr_scale is not None:
+            lr = lr * lr_scale
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(self.b1, t)
+        c2 = 1.0 - jnp.power(self.b2, t)
+
+        def dense(p, g, ms):
+            if not _is_trainable(p):
+                return (p,) + ms
+            gf = g.astype(jnp.float32)
+            if grad_scale is not None:
+                gf = grad_scale * gf
+            m = self.b1 * ms[0] + (1 - self.b1) * gf
+            v = self.b2 * ms[1] + (1 - self.b2) * jnp.square(gf)
+            ref = p.astype(jnp.float32)
+            step_ = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if self.weight_decay:
+                step_ = step_ + self.weight_decay * ref
+            return (ref - lr * step_).astype(p.dtype), m, v
+        return dense
+
+
+def fused_adam(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+               grad_clip: float | None = None) -> FusedAdam:
+    """Adam, fusable into the backward kernels.
+
+    ``update`` IS the two-pass :func:`adam` (master_copy=False) so the
+    fused path has an exact reference; note the different ``grad_clip``
+    default (None here, 1.0 there) — pass it explicitly when comparing."""
+    ref = adam(lr_fn, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+               grad_clip=grad_clip, master_copy=False)
+    return FusedAdam(init=ref.init, update=ref.update, lr_fn=lr_fn,
+                     grad_clip=grad_clip, b1=b1, b2=b2, eps=eps,
+                     weight_decay=weight_decay)
 
 
 def adam(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,

@@ -16,16 +16,18 @@ re-addresses it as a *population* (E models, one structure):
 
 * **Members must share structure.**  An E-batched launch fixes every
   static kernel input — layer widths, block size, pattern seed,
-  activation, and the per-junction fan-in ``kb`` the density quantizes
-  to (``core/sparsity.block_fan_in``).  ``cohorts.bucket`` groups
-  candidates by exactly that key; anything else (lr, momentum, init
-  seed) varies within a cohort.
-* **Hyperparameters ride the ``[E, 2]`` hyp table.**  The fused BP+UP
-  epilogue (``update_dw``/``update_gated_dw``) reads row
-  ``program_id(0)``, so each member updates under its own
-  ``[lr, momentum]`` in the same launch; a plain ``(2,)`` pair (the
-  single-model and MoE path) broadcasts to all rows in
-  ``kernels/ops.junction_train_update``.
+  activation, optimizer kind (the accumulator-slot layout is static),
+  and the per-junction fan-in ``kb`` the density quantizes to
+  (``core/sparsity.block_fan_in``).  ``cohorts.bucket`` groups
+  candidates by exactly that key; anything else (lr, momentum/b1, b2,
+  eps, weight_decay, init seed) varies within a cohort.
+* **Hyperparameters ride the ``[E, HYP_K]`` hyp table.**  The fused
+  BP+UP epilogue (``update_dw``/``update_gated_dw``) reads registry row
+  ``program_id(0)`` (``kernels/block_sparse_matmul.HYP_COLS``: lr, b1,
+  b2, eps, wd, t, gs), so each member updates under its own
+  hyperparameters — SGD+momentum or Adam — in the same launch; a plain
+  ``(2,)`` pair or ``(HYP_K,)`` row (the single-model and MoE path)
+  broadcasts to all rows in ``kernels/ops.junction_train_update``.
 * **Members never interact.**  The objective is a live-mask-weighted
   sum of per-member losses over a SHARED batch, so the population
   gradient is the stacked single-model gradients — training E members
@@ -45,12 +47,13 @@ Modules: ``population`` (stacking, per-member hyp, E-batched steps),
 from repro.search.cohorts import Cohort, bucket
 from repro.search.ledger import Ledger, MemberRecord
 from repro.search.population import (CandidateSpec, hyp_table,
-                                     init_population, make_population_eval,
+                                     init_population, init_slots,
+                                     make_population_eval,
                                      make_population_step, member_slice,
                                      structure_key)
 from repro.search.scheduler import SweepResult, run_sweep
 
 __all__ = ["CandidateSpec", "Cohort", "Ledger", "MemberRecord",
            "SweepResult", "bucket", "hyp_table", "init_population",
-           "make_population_eval", "make_population_step", "member_slice",
-           "run_sweep", "structure_key"]
+           "init_slots", "make_population_eval", "make_population_step",
+           "member_slice", "run_sweep", "structure_key"]

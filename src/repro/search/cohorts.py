@@ -2,13 +2,15 @@
 
 The engine trains E candidates in one launch ONLY when they share every
 static input of the kernels — layer widths (array shapes), block size,
-pattern seed, activation, and the per-junction fan-in ``kb`` the density
-quantizes to (``core/sparsity.block_fan_in``).  ``bucket`` groups an
-arbitrary candidate list by exactly that ``structure_key``: each bucket
-is a *cohort*, one stacked population, one jitted E-batched train step.
-Hyperparameters (lr, momentum) and init seeds vary freely within a
-cohort — they ride the ``[E, 2]`` hyp table and the member axis, not the
-compile key.
+pattern seed, activation, the optimizer kind (the accumulator-slot
+layout and the epilogue's optimizer switch are static), and the
+per-junction fan-in ``kb`` the density quantizes to
+(``core/sparsity.block_fan_in``).  ``bucket`` groups an arbitrary
+candidate list by exactly that ``structure_key``: each bucket is a
+*cohort*, one stacked population, one jitted E-batched train step.
+Hyperparameters (lr, momentum/b1, b2, eps, weight_decay) and init seeds
+vary freely within a cohort — they ride the ``[E, HYP_K]`` hyp table
+and the member axis, not the compile key.
 
 Bucketing rules (pinned by tests/test_search.py):
 

@@ -7,9 +7,12 @@ into the engine's expert dimension: junction weights ``[E, nob, kb, bs,
 bs]``, biases ``[E, n_out]``, one pattern riding once in scalar prefetch
 for all members.  One fused E-batched train step then advances ALL E
 candidates: the forward/backward kernels iterate the expert grid axis,
-and the fused BP+UP epilogue reads each member's own ``[lr, momentum]``
-row from the per-unit ``[E, 2]`` hyp table — E distinct hyperparameter
-settings, one kernel launch per junction per pass.
+and the fused BP+UP epilogue reads each member's own registry row from
+the per-unit ``[E, HYP_K]`` hyp table (kernels/block_sparse_matmul
+.HYP_COLS: lr, b1, b2, eps, wd, t, gs) — E distinct hyperparameter
+settings, SGD+momentum or Adam (one optimizer kind per population: the
+accumulator-slot layout is static), one kernel launch per junction per
+pass.
 
 Because members never interact (the loss is a live-mask-weighted SUM of
 per-member losses and every parameter leaf is E-leading), training the
@@ -39,19 +42,27 @@ from repro.core.sparsity import SparsityConfig, block_fan_in
 class CandidateSpec:
     """One candidate network + its training hyperparameters.
 
-    (layers, block, seed, act, density-derived fan-ins) define the
-    *structure* — candidates agreeing on all of those share patterns and
-    can ride one population (search/cohorts.py buckets by exactly that
-    key); lr / momentum / init_seed vary freely WITHIN a population.
+    (layers, block, seed, act, opt, density-derived fan-ins) define the
+    *structure* — candidates agreeing on all of those share patterns AND
+    accumulator-slot layout, so they can ride one population
+    (search/cohorts.py buckets by exactly that key); lr / momentum / b2 /
+    eps / weight_decay / init_seed vary freely WITHIN a population.
+
+    ``momentum`` is the hyp row's slot-0 decay column: SGD momentum, or
+    Adam's b1 when ``opt="adam"`` — the kernels make no distinction.
     """
     lr: float
-    momentum: float = 0.0
+    momentum: float = 0.0      # slot-0 decay: SGD momentum / Adam b1
     density: float = 0.25
     layers: tuple[int, ...] = (1024, 512, 128)   # widths incl. in/out
     block: int = 128
     act: str = "sigmoid"       # every junction's epilogue (paper Sec. III)
     seed: int = 0              # pattern seed (structure, not init)
     init_seed: int = 0         # weight-init stream for this member
+    opt: str = "sgd"           # "sgd" | "adam" (structural: slot layout)
+    b2: float = 0.95           # Adam only
+    eps: float = 1e-8          # Adam only
+    weight_decay: float = 0.0  # Adam only
 
     def fan_in_blocks(self) -> tuple[int, ...]:
         """kb per junction at this density — the structure the density
@@ -67,8 +78,10 @@ class CandidateSpec:
 
 def structure_key(spec: CandidateSpec) -> tuple:
     """The shared-pattern cohort key: everything that shapes the stacked
-    arrays and scalar-prefetch patterns, nothing that doesn't."""
-    return (spec.layers, spec.block, spec.seed, spec.act,
+    arrays, scalar-prefetch patterns and accumulator-slot layout, nothing
+    that doesn't.  ``opt`` is structural: an Adam member needs the v slot
+    allocated and the kernels' optimizer switch is static per launch."""
+    return (spec.layers, spec.block, spec.seed, spec.act, spec.opt,
             spec.fan_in_blocks())
 
 
@@ -123,24 +136,59 @@ def population_size(params) -> int:
 
 
 def hyp_table(specs: Sequence[CandidateSpec]) -> jax.Array:
-    """The per-member [E, 2] [lr, momentum] table the fused update
-    kernels index by expert grid coordinate."""
-    return jnp.asarray([[s.lr, s.momentum] for s in specs], jnp.float32)
+    """The per-member [E, HYP_K] registry table the fused update kernels
+    index by expert grid coordinate.  Adam members get t = 1 as a
+    placeholder — the scheduler stamps the real per-step time into
+    COL_T before every step (harmless on SGD/zeroed rows: t is dead
+    there)."""
+    from repro.kernels import block_sparse_matmul as bsm
+    rows = []
+    for s in specs:
+        row = [0.0] * bsm.HYP_K
+        row[bsm.COL_LR] = s.lr
+        row[bsm.COL_B1] = s.momentum
+        row[bsm.COL_GS] = 1.0
+        if s.opt == "adam":
+            row[bsm.COL_B2] = s.b2
+            row[bsm.COL_EPS] = s.eps
+            row[bsm.COL_WD] = s.weight_decay
+            row[bsm.COL_T] = 1.0
+        rows.append(row)
+    return jnp.asarray(rows, jnp.float32)
 
 
-def init_momentum(params, specs: Sequence[CandidateSpec] | None = None):
-    """fp32 momentum accumulators mirroring the trainable leaves (zeros
-    for int pattern leaves, which the fused ctx injection skips).  When
-    ``specs`` is given and NO member uses momentum, returns None — the
-    steps then run the plain-SGD kernels, skipping a weight-sized fp32
-    read+write per junction per step (zeros-with-beta-0 computes the
-    same numbers, just slower)."""
-    if specs is not None and not any(s.momentum for s in specs):
-        return None
+def _zeros_like_slots(params):
     return jax.tree.map(
         lambda p: jnp.zeros(p.shape, jnp.float32)
         if jnp.issubdtype(p.dtype, jnp.inexact) else jnp.zeros((), jnp.float32),
         params)
+
+
+def init_slots(params, specs: Sequence[CandidateSpec] | None = None):
+    """The population's fp32 accumulator-slot trees, kernel slot order:
+    () for plain SGD, (mom,) with momentum, (mom, vel) for Adam.  The
+    kernels' optimizer switch is static, so opt must be homogeneous
+    (structure_key / cohorts enforce this upstream).  Plain SGD returns
+    () — skipping a weight-sized fp32 read+write per junction per step
+    (zeros-with-beta-0 computes the same numbers, just slower)."""
+    if specs is not None:
+        kinds = {s.opt for s in specs}
+        if len(kinds) > 1:
+            raise ValueError(
+                f"population mixes optimizer kinds {sorted(kinds)} — the "
+                "slot layout is static; bucket with search/cohorts.py first")
+        if kinds == {"adam"}:
+            return (_zeros_like_slots(params), _zeros_like_slots(params))
+        if not any(s.momentum for s in specs):
+            return ()
+    return (_zeros_like_slots(params),)
+
+
+def init_momentum(params, specs: Sequence[CandidateSpec] | None = None):
+    """Back-compat shim for the pre-Adam API: the slot-0 tree or None.
+    New code should use :func:`init_slots` (handles the Adam v slot)."""
+    slots = init_slots(params, specs)
+    return slots[0] if slots else None
 
 
 # ------------------------------------------------------------------ forward
@@ -185,47 +233,71 @@ def member_losses(y, targets):
 
 
 # --------------------------------------------------------------- train step
-def _two_pass_update(params, mom, grads, hyp):
-    """Per-member SGD(+momentum) over the E-leading leaves: lr/beta come
-    from each member's hyp row, broadcast over the trailing dims — the
-    materialized-gradient reference of the fused in-kernel epilogue."""
+def _two_pass_update(params, slots, grads, hyp):
+    """Per-member optimizer step over the E-leading leaves: every column
+    comes from each member's [E, HYP_K] hyp row, broadcast over the
+    trailing dims — the materialized-gradient reference of the fused
+    in-kernel epilogue.  len(slots) picks the rule: 0/1 slots = SGD
+    (+momentum), 2 slots = Adam, with the SAME t/den guards as the kernel
+    so a zeroed hyp row freezes a member EXACTLY on this path too."""
+    from repro.kernels import block_sparse_matmul as bsm
+    is_adam = len(slots) == 2
+
     def _row(col, p):
         return hyp[:, col].reshape((-1,) + (1,) * (p.ndim - 1))
 
-    def mv_fn(p, m, g):
+    def upd(p, g, *ms):
         if not jnp.issubdtype(p.dtype, jnp.inexact):
-            return m
-        gf = g.astype(jnp.float32)
-        return _row(1, p) * m + gf if mom is not None else gf
+            return (p,) + ms
+        gf = _row(bsm.COL_GS, p) * g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        lr = _row(bsm.COL_LR, p)
+        if is_adam:
+            b1, b2 = _row(bsm.COL_B1, p), _row(bsm.COL_B2, p)
+            eps, wd = _row(bsm.COL_EPS, p), _row(bsm.COL_WD, p)
+            t = _row(bsm.COL_T, p)
+            m = b1 * ms[0] + (1.0 - b1) * gf
+            v = b2 * ms[1] + (1.0 - b2) * jnp.square(gf)
+            c1 = 1.0 - jnp.power(b1, t)
+            c2 = 1.0 - jnp.power(b2, t)
+            c1 = jnp.where(c1 == 0.0, 1.0, c1)
+            c2 = jnp.where(c2 == 0.0, 1.0, c2)
+            den = jnp.sqrt(v / c2) + eps
+            step_ = jnp.where(den == 0.0, 0.0, (m / c1) / den) + wd * p32
+            return (p32 - lr * step_).astype(p.dtype), m, v
+        if slots:
+            mv = _row(bsm.COL_B1, p) * ms[0] + gf
+            return (p32 - lr * mv).astype(p.dtype), mv
+        return ((p32 - lr * gf).astype(p.dtype),)
 
-    def p_fn(p, m):
-        if not jnp.issubdtype(p.dtype, jnp.inexact):
-            return p
-        return (p.astype(jnp.float32) - _row(0, p) * m).astype(p.dtype)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_ms = [treedef.flatten_up_to(s) for s in slots]
+    out = [upd(*a) for a in zip(flat_p, flat_g, *flat_ms)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_slots = tuple(treedef.unflatten([o[1 + i] for o in out])
+                      for i in range(len(slots)))
+    return new_params, new_slots
 
-    mv = jax.tree.map(mv_fn, params, mom if mom is not None else params,
-                      grads)
-    new_params = jax.tree.map(p_fn, params, mv)
-    return new_params, (mv if mom is not None else None)
 
-
-def _merge_updated(grads, params, mom):
+def _merge_updated(grads, params, slots):
     """Fused-step merge: the cotangents of the augmented tree's junction
-    leaves ARE the updated params / momenta (every population leaf is a
-    junction leaf — no dense remainder to tree-map).  mom None = plain
-    SGD, no momentum leaves to adopt."""
-    new_params, new_mom = [], []
+    leaves ARE the updated params / slot buffers (every population leaf
+    is a junction leaf — no dense remainder to tree-map)."""
+    new_params = []
+    new_slots = tuple([] for _ in slots)
     for li, (g, p) in enumerate(zip(grads, params)):
         layer = dict(p)
-        mlayer = dict(mom[li]) if mom is not None else None
-        for k, mk in sl.FUSED_MOM.items():
+        slayers = tuple(dict(s[li]) for s in slots)
+        for k in sl.FUSED_MOM:
             if k in p and not isinstance(p[k], dict):
                 layer[k] = g[k]
-                if mom is not None:
-                    mlayer[k] = g[mk]
+                for i, names in enumerate(sl.FUSED_SLOT_NAMES[:len(slots)]):
+                    slayers[i][k] = g[names[k]]
         new_params.append(layer)
-        new_mom.append(mlayer)
-    return new_params, (new_mom if mom is not None else None)
+        for i in range(len(slots)):
+            new_slots[i].append(slayers[i])
+    return new_params, new_slots
 
 
 def _member_health_fused(grads) -> jax.Array:
@@ -251,22 +323,34 @@ def _member_health_jnp(grads) -> jax.Array:
     return h
 
 
+def _repack_slots(new_slots: tuple, like):
+    """Return the updated slots in the caller's convention: None in =
+    None out, single tree in = single tree out, tuple in = tuple out."""
+    if like is None:
+        return None
+    if isinstance(like, tuple):
+        return new_slots
+    return new_slots[0]
+
+
 def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
                          fused: bool = True, jit: bool = True,
                          donate: bool = True, with_health: bool = False):
-    """step(params, mom, hyp, mask, x, t) -> (params, mom, losses[E])
-    — or (params, mom, losses, health[E]) with ``with_health``.
+    """step(params, slots, hyp, mask, x, t) -> (params, slots, losses[E])
+    — or (params, slots, losses, health[E]) with ``with_health``.
 
     One call trains ALL E members on the shared batch (x [M, n_in],
     t [M, n_out] one-hot): objective sum(mask * member_losses).  On the
     pallas engine with ``fused`` the junction custom_vjp applies each
     member's update in the backward kernels against its own hyp row (dw
     never in HBM); otherwise the two-pass reference materializes grads
-    and applies the identical per-member formula here.  mom None = plain
-    SGD end to end (no momentum buffers allocated or streamed; the step
-    then also returns None).  hyp [E, 2] and mask [E] are traced
-    operands — pruning a member (zero mask + zero hyp row) never
-    recompiles.
+    and applies the identical per-member formula here.  ``slots`` is the
+    accumulator-slot convention of :func:`init_slots` — None/() = plain
+    SGD end to end (no buffers allocated or streamed), a single tree =
+    SGD momentum (back-compat), (mom, vel) = Adam — and comes back in
+    the same convention.  hyp (legacy [E, 2] pair or [E, HYP_K] registry
+    table) and mask [E] are traced operands — pruning a member (zero
+    mask + zero hyp row) never recompiles.
 
     ``with_health`` adds the per-member divergence signal the scheduler's
     quarantine uses: health[e] > 0 ⇔ member e's update just went
@@ -278,8 +362,9 @@ def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
     use_fused = fused and engine == "pallas"
 
     def step(params, mom, hyp, mask, x, t):
+        slots = sl.normalize_slots(mom)
         if use_fused:
-            aug = sl.inject_update_ctx(params, mom, hyp)
+            aug = sl.inject_update_ctx(params, slots, hyp)
 
             def loss_fn(aug):
                 y = population_forward(aug, x, act=act, engine=engine)
@@ -288,7 +373,8 @@ def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
 
             grads, losses = jax.grad(loss_fn, has_aux=True,
                                      allow_int=True)(aug)
-            new_params, new_mom = _merge_updated(grads, params, mom)
+            new_params, new_slots = _merge_updated(grads, params, slots)
+            new_mom = _repack_slots(new_slots, mom)
             if with_health:
                 return new_params, new_mom, losses, _member_health_fused(grads)
             return new_params, new_mom, losses
@@ -298,8 +384,11 @@ def make_population_step(act: str = "sigmoid", *, engine: str = "auto",
             losses = member_losses(y, t)
             return jnp.sum(losses * mask), losses
 
+        from repro.kernels import block_sparse_matmul as bsm
+        hyp_k = bsm.normalize_hyp(hyp, population_size(params))
         grads, losses = jax.grad(loss_fn, has_aux=True, allow_int=True)(params)
-        new_params, new_mom = _two_pass_update(params, mom, grads, hyp)
+        new_params, new_slots = _two_pass_update(params, slots, grads, hyp_k)
+        new_mom = _repack_slots(new_slots, mom)
         if with_health:
             return new_params, new_mom, losses, _member_health_jnp(grads)
         return new_params, new_mom, losses

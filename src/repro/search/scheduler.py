@@ -18,8 +18,9 @@ winner.
 
 Pruning is in place and shape-stable: a pruned member's mask entry goes
 to 0 (its loss drops out of the objective, so its gradients are exact
-zeros) and its hyp row goes to [0, 0] (lr = momentum = 0, so the fused
-epilogue rewrites w' = w and mom' = 0 — parameters frozen).  The arrays
+zeros) and its hyp row goes to all zeros (the kernels' guarded epilogue
+makes an all-zero registry row an exact freeze for SGD and Adam alike:
+w' = w, slots' = 0).  The arrays
 the jitted step sees never change shape, so a sweep compiles each cohort
 step exactly once — the serve engine's finished-slot masking applied to
 training, and the paper's "greater exploration ... on-chip" claim as a
@@ -62,8 +63,8 @@ from repro.search.ledger import Ledger, MemberRecord, make_meta
 class CohortState:
     cohort: ch.Cohort
     params: list
-    mom: list
-    hyp: jax.Array          # [E, 2], zeroed rows = pruned
+    mom: tuple              # accumulator-slot trees (population.init_slots)
+    hyp: jax.Array          # [E, HYP_K], zeroed rows = pruned
     mask: jax.Array         # [E] f32, 0 = pruned
     records: list[MemberRecord]
     step: callable
@@ -74,6 +75,11 @@ class CohortState:
     @property
     def out_width(self) -> int:
         return self.cohort.specs[0].layers[-1]
+
+    @property
+    def is_adam(self) -> bool:
+        # homogeneous per cohort: opt is part of the structure key
+        return self.cohort.specs[0].opt == "adam"
 
 
 @dataclasses.dataclass
@@ -170,7 +176,7 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
                                                 cohort.specs))]
         states.append(CohortState(
             cohort=cohort, params=params,
-            mom=pop.init_momentum(params, cohort.specs),
+            mom=pop.init_slots(params, cohort.specs),
             hyp=pop.hyp_table(cohort.specs),
             mask=jnp.ones((cohort.size,), jnp.float32),
             records=records,
@@ -196,6 +202,15 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
             for st in states:
                 if not any(r.pruned_at is None for r in st.records):
                     continue        # whole cohort pruned: steps are no-ops
+                if st.is_adam:
+                    # stamp the per-step bias-correction time into every
+                    # row: all live members step in lockstep, and on a
+                    # quarantined (zeroed) row t is harmless — lr = 0 and
+                    # the masked gradients are exact zeros, so the
+                    # kernels still write w' = w, m' = v' = 0
+                    from repro.kernels import block_sparse_matmul as bsm
+                    st.hyp = st.hyp.at[:, bsm.COL_T].set(
+                        jnp.float32(global_step + 1))
                 out = st.step(
                     st.params, st.mom, st.hyp, st.mask, xb,
                     jnp.take(st.t_train_pad, bi, axis=0))

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import sparse_linear as sl
+from repro.kernels import block_sparse_matmul as bsm
 from repro.models import model as M
-from repro.optim import FusedSGD, Optimizer
+from repro.optim import FusedOptimizer, Optimizer, global_norm_scale
 
 
 def _resolve_engine(cfg: ArchConfig) -> ArchConfig:
@@ -39,8 +40,9 @@ def fused_update_eligible(cfg: ArchConfig, optimizer: Optimizer,
         return False, "ArchConfig.fused_update is off"
     if cfg.engine != "pallas":
         return False, "engine is not pallas (jnp keeps the two-pass reference)"
-    if not isinstance(optimizer, FusedSGD):
-        return False, "optimizer is not optim.fused_sgd"
+    if not isinstance(optimizer, FusedOptimizer):
+        return False, ("optimizer is not a FusedOptimizer "
+                       "(optim.fused_sgd / optim.fused_adam)")
     if cfg.family == "hybrid":
         # the shared attn/MLP block is applied once per super-layer, and
         # JAX SUMS cotangents across uses — but a fused junction's
@@ -49,11 +51,11 @@ def fused_update_eligible(cfg: ArchConfig, optimizer: Optimizer,
         return False, ("hybrid shares one attn/MLP block across "
                        "super-layers — reused junction weights break the "
                        "updated-params cotangent contract")
-    if optimizer.grad_clip is not None:
-        return False, ("grad_clip needs the materialized gradient tree — "
-                       "refusing the fused path")
-    if microbatches != 1:
-        return False, "microbatch accumulation needs materialized grads"
+    # grad_clip: served fused via a norm pre-pass folded into the hyp
+    # row's gs column.  microbatches > 1: served fused by running the
+    # full batch — mean of equal-sized microbatch means IS the full-batch
+    # mean, and the kernels' M-innermost flush applies the update exactly
+    # once per tile regardless.  Neither refuses anymore.
     if cfg.cast_params_once:
         return False, "cast_params_once re-materializes the weights"
     if cfg.param_dtype != cfg.dtype:
@@ -113,35 +115,50 @@ def scale_params_delta(params, new_params, lr_scale):
     return jax.tree.map(blend, params, new_params)
 
 
-def _make_fused_train_step(cfg: ArchConfig, optimizer: FusedSGD):
+def _make_fused_train_step(cfg: ArchConfig, optimizer: FusedOptimizer):
     """The fused BP+UP step: the paper's concurrent backprop+update made
-    literal.  The momentum buffers and the [lr, momentum] pair are
-    injected into every junction dict before differentiating; the
+    literal.  The optimizer's accumulator slots and its (HYP_K,) registry
+    row are injected into every junction dict before differentiating; the
     junction custom_vjp applies the update inside the backward kernels
     (weight gradients never reach HBM) and returns the UPDATED params /
-    momenta as those leaves' cotangents; optimizer.merge adopts them and
-    tree-maps only the dense leaves.
+    slot buffers as those leaves' cotangents; optimizer.merge adopts them
+    and tree-maps only the dense leaves.
 
-    ``lr_scale`` (guardian backoff) multiplies the lr entry of the hyp
-    table BEFORE injection — the backed-off rate rides the existing
+    ``lr_scale`` (guardian backoff) multiplies the lr column of the hyp
+    row BEFORE injection — the backed-off rate rides the existing
     hyp-table operand into the kernels, no retrace of the kernel graph.
-    metrics["nonfinite"] sums the junctions' in-kernel health flags (the
-    only divergence signal on this path: gradients never reach HBM)."""
+    ``grad_clip`` is served by a norm pre-pass: an extra backward over
+    the PLAIN (non-injected) loss computes the same global norm the
+    two-pass reference clips with, and its scale folds into the gs
+    column (and merge's grad_scale) — exact, at the cost of a second
+    backward.  metrics["nonfinite"] sums the junctions' in-kernel health
+    flags (the only divergence signal on this path: gradients never
+    reach HBM)."""
     def loss(aug_params, batch):
         return M.loss_fn(cfg, aug_params, batch)
 
     vg = jax.value_and_grad(loss, has_aux=True, allow_int=True)
 
+    plain_vg = None
+    if optimizer.grad_clip is not None:
+        plain_vg = jax.value_and_grad(
+            lambda params, batch: M.loss_fn(cfg, params, batch),
+            has_aux=True, allow_int=True)
+
     def train_step(params, opt_state, batch, step, lr_scale=None):
-        mom = opt_state["mom"] if optimizer.momentum else None
         hyp = optimizer.hyp(step)
+        grad_scale = None
+        if plain_vg is not None:
+            _, raw = plain_vg(params, batch)
+            grad_scale, _ = global_norm_scale(raw, optimizer.grad_clip)
+            hyp = hyp.at[bsm.COL_GS].multiply(grad_scale)
         if lr_scale is not None:
-            hyp = hyp * jnp.stack([jnp.float32(lr_scale),
-                                   jnp.float32(1.0)])
-        aug = sl.inject_update_ctx(params, mom, hyp)
+            hyp = hyp.at[bsm.COL_LR].multiply(jnp.float32(lr_scale))
+        aug = sl.inject_update_ctx(params, optimizer.slots(opt_state), hyp)
         (l, metrics), grads = vg(aug, batch)
         new_params, new_opt = optimizer.merge(grads, opt_state, params, step,
-                                              lr_scale=lr_scale)
+                                              lr_scale=lr_scale,
+                                              grad_scale=grad_scale)
         metrics = dict(metrics, loss=l,
                        nonfinite=collect_junction_health(grads))
         return new_params, new_opt, metrics
@@ -169,9 +186,13 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
     jit=False to get the raw function (launchers that attach shardings /
     lower explicitly).
 
-    With microbatches > 1 the batch is split and gradients accumulated in a
-    scan — per-microbatch psums overlap with the next microbatch's compute
-    (the paper's operational parallelization applied at the pod scale).
+    With microbatches > 1 the two-pass path splits the batch and
+    accumulates gradients in a scan — per-microbatch psums overlap with
+    the next microbatch's compute (the paper's operational
+    parallelization applied at the pod scale).  The fused path instead
+    runs the full batch in one shot: mean of equal-sized microbatch
+    means equals the full-batch mean, and the kernels' M-innermost flush
+    applies the update exactly once per tile.
 
     When ``cfg.fused_update`` holds and the config/optimizer are eligible
     (fused_update_eligible), the returned step runs the fused BP+UP path;

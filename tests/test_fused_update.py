@@ -1,16 +1,19 @@
-"""Fused BP+UP (ISSUE 4): the in-kernel weight update vs the two-pass
+"""Fused BP+UP (ISSUE 4/7): the in-kernel weight update vs the two-pass
 reference.
 
-The contract under test: with ``ArchConfig.fused_update`` + ``fused_sgd``
-on the pallas engine, the backward kernels apply the SGD(+momentum)
-update in their epilogue and the train step's "grads" tree carries
-UPDATED params at junction leaves — dw never materializes in HBM (the
-kernel-name jaxpr checks below), and the resulting params/opt state match
-the two-pass reference that materializes gradients and tree-maps the
-update.  Plus: bf16 params with fp32 momentum accumulators, the
-grad-clip/ineligibility refusal (fall back to two-pass, never silently
-different numerics), the coalesced reverse-DMA pattern with contiguous
-runs, and the make_train_step donation default.
+The contract under test: with ``ArchConfig.fused_update`` + a
+``FusedOptimizer`` (fused_sgd / fused_adam) on the pallas engine, the
+backward kernels apply the optimizer update in their epilogue — the hyp
+row is the (HYP_K,) registry row of kernels/block_sparse_matmul.HYP_COLS
+— and the train step's "grads" tree carries UPDATED params at junction
+leaves; dw never materializes in HBM (the kernel-name jaxpr checks
+below), and the resulting params/opt state match the two-pass reference
+that materializes gradients and tree-maps the update.  Plus: Adam's
+3-step bias-correction carry, bf16 params with fp32 accumulator slots,
+grad-clip (norm pre-pass folded into the gs column) and microbatch
+(full-batch identity) configs now running FUSED against their two-pass
+references, the remaining refusals, the coalesced reverse-DMA pattern
+with contiguous runs, and the make_train_step donation default.
 """
 import dataclasses
 
@@ -25,7 +28,8 @@ from repro.core.interleaver import reverse_block_pattern
 from repro.core.sparsity import SparsityConfig, make_block_pattern
 from repro.kernels import ops
 from repro.models import model as M
-from repro.optim import FusedSGD, adam, constant_schedule, fused_sgd
+from repro.optim import (FusedSGD, adam, constant_schedule, fused_adam,
+                         fused_sgd)
 from repro.train.steps import fused_update_eligible, make_train_step
 
 
@@ -119,6 +123,51 @@ def test_mnist_junction_fused_matches_two_pass(momentum, act):
                                    rtol=1e-5, atol=1e-6)
         np.testing.assert_allclose(np.asarray(got[3]), np.asarray(mbv),
                                    rtol=1e-5, atol=1e-6)
+
+
+def test_mnist_junction_fused_adam_three_step_carry():
+    """Acceptance (ISSUE 7): in-kernel Adam on the paper MNIST junction
+    matches the two-pass reference formula over 3 steps — the m/v slots
+    and the bias-correction time t carry across steps through the
+    aliased-cotangent contract."""
+    p = _mnist_junction()
+    x = jax.random.normal(jax.random.PRNGKey(1), (96, 1024))
+    co = jax.random.normal(jax.random.PRNGKey(2), (96, 512))
+    lr, b1, b2, eps, wd = 1e-3, 0.9, 0.95, 1e-8, 0.01
+    pat = (p["idx"], p["rev_ob"], p["rev_t"], p["rev_cnt"])
+    w, b = p["w"], p["b"]
+    m = jnp.zeros(w.shape, jnp.float32)
+    v = jnp.zeros(w.shape, jnp.float32)
+    mb = jnp.zeros(b.shape, jnp.float32)
+    vb = jnp.zeros(b.shape, jnp.float32)
+    rw, rb, rm, rv, rmb, rvb = w, b, m, v, mb, vb
+
+    def loss_ref(w, b):
+        y = ops.junction_matmul(x, w, *pat, bias=b, act="sigmoid")
+        return jnp.sum(y * co)
+
+    def loss_fused(w, b, m, mb, v, vb, hyp):
+        y = ops.junction_train_update(x, w, *pat, bias=b, act="sigmoid",
+                                      hyp=hyp, mom=m, mom_b=mb,
+                                      vel=v, vel_b=vb)
+        return jnp.sum(y * co)
+
+    for t in range(1, 4):
+        hyp = jnp.asarray([lr, b1, b2, eps, wd, t, 1.0], jnp.float32)
+        w, b, m, mb, v, vb = jax.grad(loss_fused, (0, 1, 2, 3, 4, 5))(
+            w, b, m, mb, v, vb, hyp)
+        gw, gb = jax.grad(loss_ref, (0, 1))(rw, rb)
+        c1, c2 = 1.0 - b1 ** t, 1.0 - b2 ** t
+        rm = b1 * rm + (1 - b1) * gw
+        rv = b2 * rv + (1 - b2) * jnp.square(gw)
+        rw = rw - lr * ((rm / c1) / (jnp.sqrt(rv / c2) + eps) + wd * rw)
+        rmb = b1 * rmb + (1 - b1) * gb
+        rvb = b2 * rvb + (1 - b2) * jnp.square(gb)
+        rb = rb - lr * ((rmb / c1) / (jnp.sqrt(rvb / c2) + eps) + wd * rb)
+    for got, ref in ((w, rw), (b, rb), (m, rm), (v, rv), (mb, rmb),
+                     (vb, rvb)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-6)
 
 
 def test_expert_gated_junction_fused_matches_two_pass():
@@ -250,6 +299,38 @@ def test_model_fused_momentum_carries_across_steps():
     _assert_trees_close(sf, sr, rtol=5e-4, atol=5e-5)
 
 
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_model_fused_adam_three_steps_matches_two_pass(dtype):
+    """Acceptance (ISSUE 7): fused Adam on the dense model matches the
+    two-pass ``adam`` reference over 3 steps — bias correction, weight
+    decay and the fp32 m/v slots all carry.  bf16 params keep fp32
+    slots; the two-pass path rounds dw to bf16 at the custom_vjp
+    boundary, hence the looser bf16 tolerance (the fused result is the
+    more precise one)."""
+    cfg = _dense_cfg(dtype=dtype, param_dtype=dtype)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    opt = fused_adam(constant_schedule(1e-3), weight_decay=0.01)
+    ok, why = fused_update_eligible(cfg, opt)
+    assert ok, why
+    ts_f = make_train_step(cfg, opt, donate=False)
+    ts_r = make_train_step(dataclasses.replace(cfg, fused_update=False),
+                           opt, donate=False)
+    pf = pr = params
+    sf = sr = opt.init(params)
+    for i in range(3):
+        pf, sf, _ = ts_f(pf, sf, batch, jnp.asarray(i))
+        pr, sr, _ = ts_r(pr, sr, batch, jnp.asarray(i))
+    if dtype == "bfloat16":
+        for t in jax.tree.leaves(sf):
+            assert t.dtype == jnp.float32    # m/v slots stay fp32
+        rtol, atol = 2e-2, 2e-2
+    else:
+        rtol, atol = 5e-4, 5e-5
+    _assert_trees_close(pf, pr, rtol=rtol, atol=atol)
+    _assert_trees_close(sf, sr, rtol=rtol, atol=atol)
+
+
 def test_moe_fused_step_matches_two_pass():
     """Acceptance: the MoE expert FFN (gated in-junction + wo junction,
     shared patterns, router/shared leaves dense) through the fused step
@@ -269,14 +350,41 @@ def test_moe_fused_step_matches_two_pass():
     _assert_trees_close(s1, s2, rtol=2e-4, atol=2e-5)
 
 
+def test_moe_fused_adam_three_steps_matches_two_pass():
+    """Acceptance (ISSUE 7): fused Adam through the MoE expert FFN — the
+    gated in-junction (wg/wi) and the wo junction each carry their own
+    m/v slot pairs; 3 steps against the two-pass reference."""
+    cfg = _moe_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    opt = fused_adam(constant_schedule(1e-3), weight_decay=0.01)
+    ts_f = make_train_step(cfg, opt, donate=False)
+    ts_r = make_train_step(dataclasses.replace(cfg, fused_update=False),
+                           opt, donate=False)
+    pf = pr = params
+    sf = sr = opt.init(params)
+    for i in range(3):
+        pf, sf, mf = ts_f(pf, sf, batch, jnp.asarray(i))
+        pr, sr, mr = ts_r(pr, sr, batch, jnp.asarray(i))
+    np.testing.assert_allclose(float(mf["loss"]), float(mr["loss"]),
+                               rtol=1e-5)
+    _assert_trees_close(pf, pr, rtol=5e-4, atol=5e-5)
+    _assert_trees_close(sf, sr, rtol=5e-4, atol=5e-5)
+
+
 # ------------------------------------------------- no-dw-in-HBM acceptance
-def test_fused_step_jaxpr_has_no_dw_kernel():
+@pytest.mark.parametrize("make_opt", [
+    lambda: fused_sgd(constant_schedule(1e-2), momentum=0.9),
+    lambda: fused_adam(constant_schedule(1e-3)),
+], ids=["sgd", "adam"])
+def test_fused_step_jaxpr_has_no_dw_kernel(make_opt):
     """Acceptance: dw is absent from the fused step's jaxpr — the only
     weight-gradient consumers are the fused update kernels (whose outputs
-    alias the parameter inputs), for the plain AND gated configurations."""
+    alias the parameter inputs), for the plain AND gated configurations,
+    under both fused optimizers."""
     for cfg in (_dense_cfg(), _moe_cfg()):
         params = M.init(cfg, jax.random.PRNGKey(0))
-        opt = fused_sgd(constant_schedule(1e-2), momentum=0.9)
+        opt = make_opt()
         raw = make_train_step(cfg, opt, jit=False)
         txt = str(jax.make_jaxpr(raw)(params, opt.init(params), _batch(cfg),
                                       jnp.asarray(0)))
@@ -293,29 +401,67 @@ def test_fused_step_jaxpr_has_no_dw_kernel():
         assert "dw_kernel" in txt_ref and "fused_update_dw" not in txt_ref
 
 
-# ----------------------------------------------------- refusal / fallback
-def test_grad_clip_refuses_fused_and_matches_clipped_reference():
-    """Regression: a gradient-clipping fused_sgd must FALL BACK to the
-    two-pass path (clip needs the materialized grad tree) — same numbers
-    as the explicit reference, no silent divergence."""
+# ------------------------------------- newly-eligible configs (ISSUE 7)
+@pytest.mark.parametrize("make_opt", [
+    lambda: fused_sgd(constant_schedule(1e-2), momentum=0.9, grad_clip=0.5),
+    lambda: fused_adam(constant_schedule(1e-3), grad_clip=0.5),
+], ids=["sgd", "adam"])
+def test_grad_clip_runs_fused_and_matches_clipped_reference(make_opt):
+    """Regression flip (ISSUE 7): grad_clip no longer refuses the fused
+    path — a norm pre-pass over the plain loss computes the SAME global
+    norm the two-pass reference clips with (optim.global_norm_scale is
+    the one shared formula) and folds its scale into the hyp row's gs
+    column.  The pre-pass costs a second backward, so dw kernels DO
+    appear in this jaxpr — alongside, not instead of, the fused update
+    kernels."""
     cfg = _dense_cfg()
     params = M.init(cfg, jax.random.PRNGKey(0))
     batch = _batch(cfg)
-    opt = fused_sgd(constant_schedule(1e-2), momentum=0.9, grad_clip=0.5)
+    opt = make_opt()
     ok, why = fused_update_eligible(cfg, opt)
-    assert not ok and "grad_clip" in why
+    assert ok, why
     st = opt.init(params)
-    ts = make_train_step(cfg, opt, donate=False)
     txt = str(jax.make_jaxpr(make_train_step(cfg, opt, jit=False))(
         params, st, batch, jnp.asarray(0)))
-    assert "fused_update_dw" not in txt and "dw_kernel" in txt
-    # and it computes exactly the clipped two-pass reference
+    assert "fused_update_dw" in txt and "dw_kernel" in txt
+    ts = make_train_step(cfg, opt, donate=False)
     ts_ref = make_train_step(dataclasses.replace(cfg, fused_update=False),
                              opt, donate=False)
-    p1, s1, _ = ts(params, st, batch, jnp.asarray(0))
-    p2, s2, _ = ts_ref(params, st, batch, jnp.asarray(0))
-    _assert_trees_close(p1, p2, rtol=0, atol=0)
-    _assert_trees_close(s1, s2, rtol=0, atol=0)
+    pf = pr = params
+    sf = sr = st
+    for i in range(2):
+        pf, sf, _ = ts(pf, sf, batch, jnp.asarray(i))
+        pr, sr, _ = ts_ref(pr, sr, batch, jnp.asarray(i))
+    _assert_trees_close(pf, pr, rtol=2e-4, atol=2e-5)
+    _assert_trees_close(sf, sr, rtol=2e-4, atol=2e-5)
+
+
+def test_microbatch_runs_fused_and_matches_accumulated_reference():
+    """Regression flip (ISSUE 7): microbatches > 1 no longer refuses the
+    fused path — the fused step runs the FULL batch (mean of equal-sized
+    microbatch means == full-batch mean; the kernels' M-innermost flush
+    applies the update exactly once per tile) and must match the
+    two-pass scan-accumulated reference."""
+    cfg = _dense_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 16),
+                                          0, cfg.vocab)}
+    opt = fused_sgd(constant_schedule(1e-2), momentum=0.9)
+    ok, why = fused_update_eligible(cfg, opt, microbatches=4)
+    assert ok, why
+    ts = make_train_step(cfg, opt, microbatches=4, donate=False)
+    ts_ref = make_train_step(dataclasses.replace(cfg, fused_update=False),
+                             opt, microbatches=4, donate=False)
+    st = opt.init(params)
+    p1, s1, m1 = ts(params, st, batch, jnp.asarray(0))
+    p2, s2, m2 = ts_ref(params, st, batch, jnp.asarray(0))
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    _assert_trees_close(p1, p2, rtol=2e-4, atol=2e-5)
+    _assert_trees_close(s1, s2, rtol=2e-4, atol=2e-5)
+
+
+# ----------------------------------------------------- refusal / fallback
 
 
 @pytest.mark.parametrize("break_it,frag", [
@@ -361,13 +507,12 @@ def test_fused_rejects_non_fp32_momentum():
             mom=jnp.zeros_like(w))
 
 
-def test_fused_eligibility_wrong_optimizer_and_microbatch():
+def test_fused_eligibility_wrong_optimizer():
+    """A plain (non-Fused) optimizer still refuses — it has no hyp row /
+    slot contract for the kernels to consume."""
     cfg = _dense_cfg()
     ok, why = fused_update_eligible(cfg, adam(constant_schedule(1e-3)))
-    assert not ok and "fused_sgd" in why
-    opt = fused_sgd(constant_schedule(1e-2))
-    ok, why = fused_update_eligible(cfg, opt, microbatches=4)
-    assert not ok and "microbatch" in why.lower()
+    assert not ok and "FusedOptimizer" in why
 
 
 def test_two_pass_fused_sgd_matches_plain_sgd():

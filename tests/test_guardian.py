@@ -168,11 +168,11 @@ def _make_regression_step(engine, lr=0.2, momentum=0.9):
 
     if engine == "pallas":
         def train_step(params, opt_state, batch, step, lr_scale=None):
+            from repro.kernels import block_sparse_matmul as bsm
             hyp = opt.hyp(step)
             if lr_scale is not None:
-                hyp = hyp * jnp.stack([jnp.float32(lr_scale),
-                                       jnp.float32(1.0)])
-            aug = sl.inject_update_ctx(params, opt_state["mom"], hyp)
+                hyp = hyp.at[bsm.COL_LR].multiply(jnp.float32(lr_scale))
+            aug = sl.inject_update_ctx(params, opt.slots(opt_state), hyp)
 
             def loss(aug):
                 y = sl.apply(aug, batch["x"], engine="pallas", act="sigmoid")

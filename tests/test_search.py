@@ -6,9 +6,12 @@ whose per-member losses and parameters match E independently-trained
 single models (SGD ± momentum, including the fused BP+UP path indexing
 the per-unit [E, 2] hyp table), and the successive-halving scheduler
 runs a density x lr sweep end to end producing a ledger that names a
-winning config.  Plus: the (2,) pair / [E, 2] table equivalence at the
-ops level, cohort bucketing rules, in-place prune freezing, and ledger
-JSON round-tripping.
+winning config.  Plus (ISSUE 7): Adam populations — distinct per-member
+lr/b1/weight_decay riding the [E, HYP_K] registry table with (m, v)
+slot pairs — fused vs two-pass, the (2,)/(HYP_K,) broadcast vs
+explicit-table equivalence at the ops level, opt as a structural cohort
+axis, cohort bucketing rules, in-place prune freezing, and ledger JSON
+round-tripping.
 """
 import json
 
@@ -187,7 +190,45 @@ def test_population_two_pass_matches_fused():
                                    rtol=1e-3, atol=1e-4)
 
 
-# ------------------------------------------------------- [E, 2] hyp table
+def test_population_adam_fused_matches_two_pass():
+    """Acceptance (ISSUE 7): an Adam population with DISTINCT per-member
+    lr / b1 / weight_decay rides the same [E, HYP_K] contract — pallas
+    fused (in-kernel m/v slot pairs) == jnp two-pass reference over 3
+    steps, the bias-correction time stamped into COL_T each step."""
+    from repro.kernels import block_sparse_matmul as bsm
+    specs = [CandidateSpec(lr=lr, momentum=b1, opt="adam", weight_decay=wd,
+                           density=0.5, layers=(256, 128, 32), block=32,
+                           init_seed=i)
+             for i, (lr, b1, wd) in enumerate(
+                 [(1e-3, 0.9, 0.0), (2e-3, 0.8, 0.01),
+                  (5e-4, 0.95, 0.0), (1e-3, 0.85, 0.02)])]
+    E = len(specs)
+    params = init_population(jax.random.PRNGKey(9), specs)
+    x, t = _mnist_batch(32, specs[0].layers[0], specs[0].layers[-1])
+    hyp, mask = hyp_table(specs), jnp.ones((E,), jnp.float32)
+
+    sf = make_population_step(engine="pallas", fused=True, donate=False)
+    sj = make_population_step(engine="jnp", donate=False)
+    pf = pj = params
+    slf = slj = pop.init_slots(params, specs)
+    assert len(slf) == 2                      # (mom, vel)
+    for i in range(3):
+        hyp_t = hyp.at[:, bsm.COL_T].set(jnp.float32(i + 1))
+        pf, slf, lf = sf(pf, slf, hyp_t, mask, x, t)
+        pj, slj, lj = sj(pj, slj, hyp_t, mask, x, t)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lj), rtol=1e-4)
+    for li in range(len(pf)):
+        for k in ("w", "b"):
+            np.testing.assert_allclose(np.asarray(pf[li][k]),
+                                       np.asarray(pj[li][k]),
+                                       rtol=1e-3, atol=1e-5)
+        for s_f, s_j in zip(slf, slj):
+            np.testing.assert_allclose(np.asarray(s_f[li]["w"]),
+                                       np.asarray(s_j[li]["w"]),
+                                       rtol=1e-3, atol=1e-5)
+
+
+# ------------------------------------------------------- [E, k] hyp table
 def test_hyp_pair_broadcasts_to_table():
     """A shared (2,) pair on 5-D expert weights computes exactly what the
     explicitly tiled [E, 2] table does."""
@@ -216,6 +257,35 @@ def test_hyp_pair_broadcasts_to_table():
     np.testing.assert_array_equal(np.asarray(nm1), np.asarray(nm2))
 
 
+def test_hyp_row_broadcasts_to_table():
+    """A shared (HYP_K,) registry row on 5-D expert weights with Adam
+    slots computes exactly what the explicitly tiled [E, HYP_K] table
+    does."""
+    bs, E = 32, 3
+    pat = make_block_pattern(8 * bs, 4 * bs, 0.5, bs)
+    args = tuple(map(jnp.asarray, (pat.idx, pat.rev_ob, pat.rev_t,
+                                   pat.rev_cnt)))
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = jax.random.normal(ks[0], (E, 32, 8 * bs))
+    w = jax.random.normal(ks[1], (E, pat.n_out_blocks, pat.fan_in_blocks,
+                                  bs, bs)) * 0.1
+    co = jax.random.normal(ks[2], (E, 32, 4 * bs))
+    mom = jnp.full(w.shape, 0.02, jnp.float32)
+    vel = jnp.full(w.shape, 0.003, jnp.float32)
+    #                 lr,   b1,  b2,   eps,  wd,  t,   gs
+    row = jnp.asarray([1e-3, 0.9, 0.95, 1e-8, 0.01, 2.0, 1.0], jnp.float32)
+
+    def upd(hyp):
+        def loss(w, m, v):
+            y = ops.junction_train_update(x, w, *args, act="relu", hyp=hyp,
+                                          mom=m, vel=v)
+            return jnp.sum(y * co)
+        return jax.grad(loss, (0, 1, 2))(w, mom, vel)
+
+    for a, b in zip(upd(row), upd(jnp.tile(row, (E, 1)))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_hyp_bad_shape_raises():
     bs, E = 32, 3
     pat = make_block_pattern(4 * bs, 2 * bs, 0.5, bs)
@@ -223,7 +293,8 @@ def test_hyp_bad_shape_raises():
                                    pat.rev_cnt)))
     x = jnp.zeros((E, 16, 4 * bs))
     w = jnp.zeros((E, pat.n_out_blocks, pat.fan_in_blocks, bs, bs))
-    with pytest.raises(ValueError, match=r"per-unit \[E=3, 2\] table"):
+    with pytest.raises(ValueError,
+                       match=r"per-unit \[E=3, 2\] / \[E=3, 7\] table"):
         ops.junction_train_update(x, w, *args,
                                   hyp=jnp.zeros((2, 2), jnp.float32))
     # a single (4-D) junction cannot take a multi-row table
@@ -255,6 +326,24 @@ def test_cohort_bucketing_rules():
     assert [s.lr for s in c.specs] == [0.1, 0.2, 0.3]
     assert structure_key(specs[0]) == structure_key(specs[5])
     assert structure_key(specs[0]) != structure_key(specs[2])
+
+
+def test_opt_is_structural_cohort_axis():
+    """opt splits cohorts (the slot layout and the kernels' optimizer
+    switch are static per launch) and init_slots refuses a mixed-kind
+    spec list outright."""
+    import dataclasses
+
+    base = dict(lr=0.1, density=0.5, layers=(256, 128, 32), block=32)
+    s_sgd = CandidateSpec(**base)
+    s_adam = CandidateSpec(opt="adam", momentum=0.9, **base)
+    assert structure_key(s_sgd) != structure_key(s_adam)
+    assert len(bucket([s_sgd, s_adam])) == 2
+    params = init_population(
+        jax.random.PRNGKey(0),
+        [s_sgd, dataclasses.replace(s_sgd, init_seed=1)])
+    with pytest.raises(ValueError, match="optimizer kinds"):
+        pop.init_slots(params, [s_sgd, s_adam])
 
 
 def test_member_slice_recovers_standalone_init():
@@ -352,6 +441,30 @@ def test_run_sweep_end_to_end(tmp_path):
     assert led2.winner().config == w.config
     raw = json.loads(path.read_text())
     assert raw["winner"]["member"] == w.member
+
+
+def test_run_sweep_adam_lr_x_b1_fused():
+    """Acceptance (ISSUE 7): a FUSED Adam lr × b1 sweep through the
+    scheduler — per-member Adam rows in the [E, HYP_K] table, COL_T
+    stamped each step, quarantine riding the same in-kernel health
+    flags — and the ledger names a winner."""
+    specs = [CandidateSpec(lr=lr, momentum=b1, opt="adam", density=0.5,
+                           layers=(256, 128, 32), block=32, init_seed=i)
+             for i, (lr, b1) in enumerate((lr, b1)
+                                          for lr in (1e-3, 5e-3)
+                                          for b1 in (0.8, 0.9))]
+    x, t, _ = paper_dataset(n=160, seed=0)
+    x = x[:, :256]
+    cfg = SweepConfig(rounds=2, steps_per_round=2, batch_size=32,
+                      eval_samples=32, engine="pallas")
+    result = run_sweep(specs, x[:128], t[:128], x[128:], t[128:], cfg,
+                       tag="adam-smoke")
+    led = result.ledger
+    assert len(led.members) == 4
+    w = led.winner()
+    assert w is not None and w.config["opt"] == "adam"
+    assert w.config["momentum"] in (0.8, 0.9)
+    assert result.winning_params()[0]["w"].ndim == 4
 
 
 def test_momentum_free_population_skips_buffers():
