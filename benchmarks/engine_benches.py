@@ -38,6 +38,15 @@ table) against E sequential single-model steps doing the same total
 work — the resource-vs-training-time trade the sweep subsystem
 (src/repro/search/) turns into a user-facing knob.
 
+``engine.infer.int8.{mnist,moe}.*`` rows (ISSUE 8) time the quantized
+inference datapath: the same MNIST junction / MoE layer forwards with
+int8 weight codes + per-block scales (core/quantize.py) through the
+quantized kernels (``pallas``) or their op-for-op jnp sims (``jnp``) —
+forward-only, since the quantized specs are inference-only by contract.
+``bench.quant.sweep`` times the quant sweep's inner loop: one E=4
+stacked quantized population (four int8 configs sharing one cohort)
+evaluated in a single E-batched launch.
+
 Off-TPU the Pallas rows run in interpret mode — an emulator, so their
 absolute numbers only become meaningful on real hardware; the jnp rows
 are the portable baseline.  ``BENCH_*.json`` (benchmarks/run.py --json)
@@ -371,7 +380,90 @@ def bench(fast=True):
                        f"adam {'fused' if engine == 'pallas' else 'two-pass'} "
                        f"mode={mode}",
         })
+    rows.extend(_quant_rows(fast, on_tpu))
     rows.extend(_sweep_rows(fast, on_tpu))
+    return rows
+
+
+# --------------------------------------------- quantized-inference rows
+def _time_infer(step, args, n=3):
+    out = step(*args)               # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = step(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def _quant_rows(fast, on_tpu):
+    """engine.infer.int8.* (quantized forwards per engine, ISSUE 8) and
+    bench.quant.sweep (one E-batched quantized-population eval)."""
+    from repro.core import quantize as qz
+
+    rows = []
+    n_in, n_out, density, block, m_fast, m_full = (*SHAPES["mnist"],)
+    M = m_fast if fast else m_full
+    params = _junction_params(n_in, n_out, density, block)
+    x = jax.random.normal(jax.random.PRNGKey(3), (M, n_in), jnp.float32)
+    qp = qz.quantize_junction(params, qz.QuantConfig(mode="int8"))
+    for engine in ("jnp", "pallas"):
+        step = jax.jit(lambda p, x, e=engine: sl.apply(p, x, engine=e,
+                                                       act="sigmoid"))
+        dt = _time_infer(step, (qp, x))
+        mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+        rows.append({
+            "name": f"engine.infer.int8.mnist.{engine}",
+            "us_per_call": dt * 1e6,
+            "derived": f"M={M} {n_in}->{n_out} d={density} bs={block} "
+                       f"int8 fwd-only mode={mode}",
+        })
+
+    E, K, d, f, density, block, tok_fast, tok_full = MOE_SHAPE
+    T = tok_fast if fast else tok_full
+    moe_params = moe_mod.moe_init(jax.random.PRNGKey(0), _moe_cfg("jnp"))
+    moe_q = qz.quantize_tree(moe_params, qz.QuantConfig(mode="int8"))
+    xm = jax.random.normal(jax.random.PRNGKey(4), (1, T, d), jnp.float32)
+    for engine in ("jnp", "pallas"):
+        cfg = _moe_cfg(engine)
+
+        @jax.jit
+        def step(p, x, cfg=cfg):
+            y, aux = moe_mod.moe_apply(p, x, cfg)
+            return y
+
+        dt = _time_infer(step, (moe_q, xm))
+        mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+        rows.append({
+            "name": f"engine.infer.int8.moe.{engine}",
+            "us_per_call": dt * 1e6,
+            "derived": f"T={T} E={E} top{K} {d}->{f} d={density} bs={block} "
+                       f"int8 fwd-only mode={mode}",
+        })
+
+    # one cohort of the PTQ sweep (launch/quant_sweep.py): four int8
+    # configs stacked on the member axis, one E-batched quantized eval
+    Eq = 4
+    configs = [qz.QuantConfig(mode="int8", bits=b, granularity=g)
+               for b, g in ((8, "block"), (6, "block"), (4, "block"),
+                            (8, "unit"))]
+    members = [qz.quantize_junction(params, q) for q in configs]
+    popq = {k: members[0][k] for k in sl.PATTERN_LEAVES}
+    for k in ("wq", "w_scale", "b"):
+        popq[k] = jnp.stack([m[k] for m in members])
+    Ms = 256 if fast else 1024
+    xs = jnp.broadcast_to(x[:Ms][None], (Eq, Ms, n_in))
+    engine = sl.resolve_engine("auto")
+    mode = "compiled" if (on_tpu or engine == "jnp") else "interpret"
+    step = jax.jit(lambda p, x: sl.apply(p, x, engine=engine, act="sigmoid"))
+    dt = _time_infer(step, (popq, xs))
+    rows.append({
+        "name": "bench.quant.sweep",
+        "us_per_call": dt * 1e6,
+        "derived": f"E={Eq} M={Ms} {n_in}->{n_out} d={density} bs={block} "
+                   f"one E-batched int8 cohort eval engine={engine} "
+                   f"mode={mode}",
+    })
     return rows
 
 

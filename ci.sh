@@ -103,6 +103,32 @@ print(f"[ci] fault smoke: member(s) {[m['member'] for m in q]} quarantined "
       f"eval_loss={w['eval_losses'][-1]:.4f}")
 PY
 
+echo "== quantized smoke (int8 quantize-at-load serve + bit-width sweep) =="
+# quantize-at-load serving end to end: every sparse junction decodes
+# through the int8 kernels (ServeConfig.quantize drops the fp weight
+# leaves at load — core/quantize.quantize_tree)
+python -m repro.launch.serve --arch stablelm-3b --reduce --sparse \
+  --quantize int8 --requests 2 --prompt-len 8 --max-new 4
+# E=4 bit-width quality-vs-speed sweep riding the population engine: one
+# stacked int8 cohort (4 configs, one E-batched eval) whose ledger must
+# name a finite winner
+python -m repro.launch.quant_sweep --bits 8,6,4,3 --granularities block \
+  --steps 4 --batch 32 --samples 256 --eval-samples 64 --calib-samples 64 \
+  --hidden 128 --block 32 --engine jnp --tag "${TAG}-quant" \
+  --out "QUANT_${TAG}.json"
+python - "QUANT_${TAG}.json" <<'PY'
+import json, math, sys
+led = json.load(open(sys.argv[1]))
+w = led.get("winner")
+if not (w and math.isfinite(w["eval_loss"])):
+    sys.exit(f"[ci] quant sweep ledger {sys.argv[1]} names no finite winner")
+if len(led["records"]) != 4:
+    sys.exit(f"[ci] quant sweep ran {len(led['records'])} configs, wanted 4")
+print(f"[ci] quant sweep winner: {w['config']} "
+      f"eval_loss={w['eval_loss']:.4f} "
+      f"(delta vs fp32 {w['delta_vs_fp32']:+.4f})")
+PY
+
 echo "== fast benches (engine incl. MoE + fused-update rows, sweep, roofline) =="
 python -m benchmarks.run --only engine,roofline --json "BENCH_${TAG}.json" \
   --tag "$TAG"
@@ -124,6 +150,9 @@ THRESHOLDS = {
     "engine.update.adam.moe.pallas": 1.4,
     "bench.sweep.mnist.population": 1.5,
     "bench.sweep.mnist.sequential": 1.5,
+    "engine.infer.int8.moe.jnp": 1.35,
+    "engine.infer.int8.moe.pallas": 1.35,
+    "bench.quant.sweep": 1.5,
 }
 
 path, base_path, fail_on_regress = sys.argv[1], sys.argv[2], sys.argv[3] == "1"

@@ -1,0 +1,376 @@
+"""Post-training quantization of junction weights — the int8/fixed-point
+inference datapath (paper Sec. III-C/III-D re-expressed for the MXU).
+
+Two modes, one storage contract.  ``quantize_junction`` REPLACES a
+junction's fp weight leaf ``"w"`` with integer codes under ``"wq"`` (MoE
+expert dicts: ``wg``/``wi``/``wo`` → ``wgq``/``wiq``/``woq``), so a
+quantized tree provably cannot reach the fp kernels — there is no fp
+weight left to dot.  Detection everywhere is structural: ``"wq" in
+params`` (``"wgq"`` for expert dicts).
+
+* ``mode="int8"`` — symmetric absmax weight quantization per
+  ``[nob, kb]`` block (``granularity="block"``) or one scale per
+  junction unit (``granularity="unit"``, broadcast into the SAME
+  ``[..., nob, kb]`` scale layout so the kernel has one contract).
+  Codes are an int8 container for any ``bits <= 8`` (sub-8 widths clip
+  to ±(2^(bits-1)-1) — the quality-vs-speed sweep axis).  Activations
+  are quantized DYNAMICALLY per row per gathered fan-in slot (absmax /
+  127) unless a calibrated static per-unit ``x_scale`` rides along
+  (``calibrate_layer_scales``: absmax over a calibration batch).  The
+  dequant epilogue rescales the int32 dot back to fp32, then the
+  ordinary fused activation applies — quality loss is the quantization
+  error only.
+* ``mode="fxp"`` — the paper's full fixed-point pipeline: weights (and
+  in-kernel, activations) become bit-triplet codes (value * 2^bf,
+  saturated to the ``FxpFormat`` range), products accumulate exactly in
+  int32, one round-half-up shift by bf + saturate replaces the fp
+  epilogue, and the activation is a VMEM-resident LUT over all 2^bw
+  codes (``core/fixed_point.sigmoid_tables``) — bit-exact against the
+  ``core/fixed_point.py`` clipping-tree reference whenever no
+  intermediate adder clips and products land on the grid.  The LUT
+  bakes the activation at quantize time (``qlut``), so the runtime
+  ``act`` argument is ignored on this path; ``qfmt = [bf, bn]`` rides
+  as a traced i32 scalar-prefetch leaf (the saturate bound comes from
+  the static LUT length: 2^(bn+bf) == len(lut)/2).
+
+Both modes are INFERENCE-ONLY: ``ops.junction_train_update`` and
+``sparse_linear.inject_update_ctx`` refuse integer-code weights.
+
+The jnp sims here (``apply_quant_jnp`` / ``expert_apply_int8``) are the
+``engine="jnp"`` twins of the quantized Pallas kernels and intentionally
+mirror their op-for-op arithmetic (same scale grouping, same per-slot
+accumulation order) so engine parity is exact, not approximate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fp
+from repro.core.fixed_point import PAPER_FMT, FxpFormat
+
+Params = dict[str, Any]
+
+# Leaves a quantized junction may carry on top of the pattern leaves.
+QUANT_LEAVES = ("wq", "w_scale", "x_scale", "qfmt", "qlut")
+MOE_QUANT_LEAVES = ("wgq", "wg_scale", "wiq", "wi_scale", "woq", "wo_scale",
+                    "x_scale_in", "x_scale_out")
+
+# activations the fxp LUT can bake (act_lut below)
+FXP_LUT_ACTS = ("sigmoid", "none", "relu")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """One quantization configuration — a population-sweep member
+    (launch/quant_sweep.py sweeps bits x granularity as the E axis).
+
+    mode: "int8" (scaled integer codes, fp32 dequant epilogue + fp act)
+        or "fxp" (the paper's full fixed-point pipeline + LUT act).
+    bits: int8 mode weight code width, 2..8 (codes stay in the int8
+        container; sub-8 widths just clip tighter).
+    granularity: "block" (one scale per [nob, kb] weight block) or
+        "unit" (one scale per junction unit, broadcast to block layout).
+    fmt: fxp mode bit triplet (Table II).
+    act: fxp mode LUT activation, baked at quantize time.
+    """
+    mode: str = "int8"
+    bits: int = 8
+    granularity: str = "block"
+    fmt: FxpFormat = PAPER_FMT
+    act: str = "sigmoid"
+
+    def __post_init__(self):
+        if self.mode not in ("int8", "fxp"):
+            raise ValueError(f"unknown quant mode {self.mode!r} (int8 | fxp)")
+        if self.mode == "int8" and not 2 <= self.bits <= 8:
+            raise ValueError(f"int8 mode bits must be 2..8, got {self.bits}")
+        if self.granularity not in ("block", "unit"):
+            raise ValueError(f"granularity {self.granularity!r} "
+                             "(block | unit)")
+        if self.mode == "fxp" and self.act not in FXP_LUT_ACTS:
+            raise ValueError(f"fxp LUT activation {self.act!r} "
+                             f"(one of {FXP_LUT_ACTS})")
+
+    def to_dict(self) -> dict:
+        d = {"mode": self.mode, "bits": self.bits,
+             "granularity": self.granularity}
+        if self.mode == "fxp":
+            d.update(fmt=[self.fmt.bw, self.fmt.bn, self.fmt.bf],
+                     act=self.act)
+        return d
+
+
+def structure_key(q: QuantConfig) -> tuple:
+    """The cohort key for E-batched quant sweeps (search/cohorts
+    .bucket_quant): what changes the stacked array layout / kernel
+    configuration, nothing that doesn't.  int8 bits and granularity are
+    NOT structural — codes share the int8 container and scales share the
+    [nob, kb] layout, so they vary freely within a cohort; the fxp
+    triplet and baked LUT are structural (int32 codes, per-format
+    table)."""
+    if q.mode == "int8":
+        return ("int8",)
+    return ("fxp", q.fmt.bw, q.fmt.bn, q.fmt.bf, q.act)
+
+
+def is_quantized(p) -> bool:
+    return isinstance(p, dict) and ("wq" in p or "wgq" in p)
+
+
+def quant_mode(p: Params) -> str:
+    return "fxp" if "qfmt" in p else "int8"
+
+
+# ------------------------------------------------------------ weight codes
+def quantize_weights(w, *, bits: int = 8, granularity: str = "block"):
+    """w [..., nob, kb, bs, bs] -> (codes int8 same shape, scales f32
+    [..., nob, kb]).  Symmetric absmax per weight block; "unit"
+    granularity computes one absmax per leading unit and broadcasts it
+    into the per-block layout (one kernel contract for both)."""
+    w = jnp.asarray(w, jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    if granularity == "block":
+        absmax = jnp.max(jnp.abs(w), axis=(-2, -1))          # [..., nob, kb]
+    else:  # one scale per unit, broadcast to the block layout
+        absmax = jnp.max(jnp.abs(w), axis=(-4, -3, -2, -1), keepdims=True)
+        absmax = jnp.broadcast_to(absmax[..., 0, 0], w.shape[:-2])
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    codes = jnp.clip(jnp.round(w / scale[..., None, None]), -qmax, qmax)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def fxp_encode_weights(w, fmt: FxpFormat):
+    """fp weights -> int32 bit-triplet codes (value * 2^bf, saturated)."""
+    lim = fmt.n_codes // 2
+    codes = jnp.round(jnp.asarray(w, jnp.float32) * fmt.scale)
+    return jnp.clip(codes, -lim, lim - 1).astype(jnp.int32)
+
+
+def act_lut(fmt: FxpFormat, act: str = "sigmoid") -> jax.Array:
+    """The VMEM activation table: one fp32 entry per two's-complement
+    code (index = code & (2^bw - 1)), activation pre-applied and
+    re-quantized to the grid like the FPGA's BRAM tables."""
+    if act == "sigmoid":
+        table = fp.sigmoid_tables(fmt)[0]
+    else:
+        codes = np.arange(fmt.n_codes)
+        vals = np.where(codes >= fmt.n_codes // 2,
+                        codes - fmt.n_codes, codes) / fmt.scale
+        if act == "none":
+            table = vals
+        elif act == "relu":
+            table = np.clip(vals, 0.0, fmt.max_val)
+        else:
+            raise ValueError(f"fxp LUT activation {act!r} "
+                             f"(one of {FXP_LUT_ACTS})")
+    return jnp.asarray(table, jnp.float32)
+
+
+# -------------------------------------------------------- tree conversion
+def _quantize_single(p: Params, q: QuantConfig, x_scale=None) -> Params:
+    out = {k: v for k, v in p.items() if k != "w"}
+    if q.mode == "int8":
+        out["wq"], out["w_scale"] = quantize_weights(
+            p["w"], bits=q.bits, granularity=q.granularity)
+        if x_scale is not None:
+            out["x_scale"] = jnp.asarray(x_scale, jnp.float32)
+    else:
+        out["wq"] = fxp_encode_weights(p["w"], q.fmt)
+        out["qfmt"] = jnp.asarray([q.fmt.bf, q.fmt.bn], jnp.int32)
+        out["qlut"] = act_lut(q.fmt, q.act)
+        if "b" in p:   # snap the bias to the triplet grid (q_add operand)
+            out["b"] = fp.quantize(p["b"], q.fmt)
+    return out
+
+
+def _quantize_moe(p: Params, q: QuantConfig, x_scale_in=None,
+                  x_scale_out=None) -> Params:
+    if q.mode != "int8":
+        raise ValueError(
+            "fxp quantization covers plain junctions only — the MoE "
+            "expert gate (silu(g) * u) has no single-LUT fixed-point "
+            "epilogue; quantize expert FFNs with mode='int8'")
+    out = {k: v for k, v in p.items() if k not in ("wg", "wi", "wo")}
+    for name in ("wg", "wi", "wo"):
+        out[name + "q"], out[name + "_scale"] = quantize_weights(
+            p[name], bits=q.bits, granularity=q.granularity)
+    if x_scale_in is not None:
+        out["x_scale_in"] = jnp.asarray(x_scale_in, jnp.float32)
+    if x_scale_out is not None:
+        out["x_scale_out"] = jnp.asarray(x_scale_out, jnp.float32)
+    return out
+
+
+def quantize_junction(p: Params, q: QuantConfig, **x_scales) -> Params:
+    """Quantize ONE junction dict (single "w"/"idx" or MoE expert
+    "wg"/"idx_in") at checkpoint-load time.  Pattern leaves, bias and any
+    other metadata ride through; the fp weight leaves are REMOVED.
+    Optional calibrated activation scales: ``x_scale=`` (single),
+    ``x_scale_in=`` / ``x_scale_out=`` (MoE)."""
+    if "idx_in" in p:
+        return _quantize_moe(p, q, x_scales.get("x_scale_in"),
+                             x_scales.get("x_scale_out"))
+    return _quantize_single(p, q, x_scales.get("x_scale"))
+
+
+def quantize_tree(params, q: QuantConfig):
+    """Walk an arbitrary params tree (the serve engine's quantize-at-load
+    entry) and quantize every SPARSE junction dict in place; dense
+    layers (attention projections, embeddings, junctions whose dims
+    didn't tile) stay full-precision — quantization rides the paper
+    datapath only."""
+    from repro.core import sparse_linear as sl
+
+    def rec(p):
+        if isinstance(p, dict):
+            if sl.is_junction(p) and ("w" in p or "wg" in p):
+                return quantize_junction(p, q)
+            return {k: rec(v) for k, v in p.items()}
+        if isinstance(p, (list, tuple)):
+            return type(p)(rec(v) for v in p)
+        return p
+    return rec(params)
+
+
+def calibrate_layer_scales(layers: Sequence[Params], x, *, act: str,
+                           engine: str = "jnp") -> list[float]:
+    """PTQ calibration (absmax over a calibration batch): run ``x``
+    through the fp layer stack, recording each junction's input absmax;
+    returns the static per-layer activation scales (absmax / 127) for
+    ``x_scale``.  Layer-iterable models only (the MNIST / population
+    path); serve models quantize without calibration and use dynamic
+    per-row activation scales instead."""
+    from repro.core import sparse_linear as sl
+    scales = []
+    for p in layers:
+        ax = float(jnp.max(jnp.abs(x)))
+        scales.append(ax / 127.0 if ax > 0.0 else 1.0)
+        x = sl.apply(p, x, engine=engine, act=act)
+    return scales
+
+
+# ------------------------------------------------------------- jnp engine
+def _slot_scales(xk, x_scale):
+    """The activation quantization scale for one gathered fan-in slot —
+    the kernel's exact formula: dynamic per-row absmax/127 (shared
+    between engines because it never looks across the row tile), or the
+    calibrated static per-unit scale."""
+    if x_scale is None:
+        ax = jnp.max(jnp.abs(xk), axis=-1, keepdims=True)
+        return jnp.where(ax == 0.0, 1.0, ax / 127.0)
+    return jnp.asarray(x_scale, jnp.float32)
+
+
+def _int8_apply(x, wq, idx, w_scale, b=None, x_scale=None):
+    """Single-junction int8 sim: x [..., nib*bs] -> pre-activation
+    [..., nob*bs] in fp32.  Op-for-op the Pallas kernel's arithmetic:
+    per-slot activation codes, int32 dot, dequant by (sx * w_scale)."""
+    nob, kb, bs, _ = wq.shape
+    lead = x.shape[:-1]
+    xb = jnp.asarray(x, jnp.float32).reshape(*lead, -1, bs)
+    y = None
+    for k in range(kb):
+        xk = jnp.take(xb, idx[:, k], axis=-2)              # [..., nob, bs]
+        sx = _slot_scales(xk, x_scale)
+        xq = jnp.clip(jnp.round(xk / sx), -127, 127).astype(jnp.int32)
+        prod = jnp.einsum("...ob,obc->...oc", xq,
+                          wq[:, k].astype(jnp.int32))      # exact int32
+        part = prod.astype(jnp.float32) * (sx * w_scale[:, k][:, None])
+        y = part if y is None else y + part
+    y = y.reshape(*lead, nob * bs)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y
+
+
+def _fxp_apply(x, wq, idx, qfmt, lut, b=None):
+    """Single-junction fixed-point sim: int32 code accumulation,
+    round-half-up shift, saturate, bias q_add, LUT activation — the
+    fwd_fxp kernel's exact integer pipeline (bf traced via qfmt; the
+    saturate bound is static from the LUT length)."""
+    nob, kb, bs, _ = wq.shape
+    T = lut.shape[0]
+    lim = T // 2
+    bf = qfmt[0]
+    scale = jnp.exp2(bf.astype(jnp.float32))
+    lead = x.shape[:-1]
+    xb = jnp.asarray(x, jnp.float32).reshape(*lead, -1, bs)
+    acc = None
+    for k in range(kb):
+        xk = jnp.take(xb, idx[:, k], axis=-2)
+        xq = jnp.clip(jnp.round(xk * scale), -lim, lim - 1).astype(jnp.int32)
+        prod = jnp.einsum("...ob,obc->...oc", xq, wq[:, k])
+        acc = prod if acc is None else acc + prod
+    half = jnp.left_shift(jnp.int32(1), bf - 1)
+    s = jnp.right_shift(acc + half, bf)
+    s = jnp.clip(s, -lim, lim - 1).reshape(*lead, nob * bs)
+    if b is not None:
+        bcode = jnp.clip(jnp.round(b.astype(jnp.float32) * scale),
+                         -lim, lim - 1).astype(jnp.int32)
+        s = jnp.clip(s + bcode, -lim, lim - 1)
+    return jnp.take(lut, jnp.bitwise_and(s, T - 1), axis=0)
+
+
+def apply_quant_jnp(params: Params, x, *, act: str = "none"):
+    """engine="jnp" forward of a quantized junction dict — 4-D single or
+    5-D E-stacked (vmapped over the unit axis, patterns shared).  int8
+    applies the runtime ``act`` on the dequantized fp32 pre-activation;
+    fxp ignores ``act`` (the LUT baked it at quantize time)."""
+    from repro.kernels import block_sparse_matmul as bsm
+    wq = params["wq"]
+    single = wq.ndim == 4
+    fxp_mode = "qfmt" in params
+
+    if fxp_mode:
+        def f(wq, b, x):
+            return _fxp_apply(x, wq, params["idx"], params["qfmt"],
+                              params["qlut"], b)
+    else:
+        def f(wq, sc, xs, b, x):
+            s = _int8_apply(x, wq, params["idx"], sc, b, xs)
+            return bsm.act_fwd(s, act)
+
+    b = params.get("b")
+    if fxp_mode:
+        if single:
+            y = f(wq, b, x)
+        else:
+            y = jax.vmap(f, in_axes=(0, None if b is None else 0, 0))(
+                wq, b, x)
+    else:
+        xs = params.get("x_scale")
+        if single:
+            y = f(wq, params["w_scale"], xs, b, x)
+        else:
+            y = jax.vmap(f, in_axes=(0, 0, None if xs is None else 0,
+                                     None if b is None else 0, 0))(
+                wq, params["w_scale"], xs, b, x)
+    return y.astype(x.dtype)
+
+
+def expert_apply_int8(wq, w_scale, idx, x, x_scale=None):
+    """MoE expert-batched int8 sim (the quantized twin of
+    models/moe._expert_apply): x [G,E,C,din] -> fp32 pre-activation
+    [G,E,C,dout], per-expert scales on the leading E dim."""
+    E, nob, kb, bs, _ = wq.shape
+    G, _, C, din = x.shape
+    xb = jnp.asarray(x, jnp.float32).reshape(G, E, C, din // bs, bs)
+    y = None
+    for k in range(kb):
+        xk = jnp.take(xb, idx[:, k], axis=3)               # [G,E,C,nob,bs]
+        if x_scale is None:
+            sx = _slot_scales(xk, None)
+        else:
+            sx = jnp.asarray(x_scale, jnp.float32).reshape(1, E, 1, 1, 1)
+        xq = jnp.clip(jnp.round(xk / sx), -127, 127).astype(jnp.int32)
+        prod = jnp.einsum("GECob,Eobc->GECoc", xq,
+                          wq[:, :, k].astype(jnp.int32))
+        part = prod.astype(jnp.float32) * (
+            sx * w_scale[:, :, k][None, :, None, :, None])
+        y = part if y is None else y + part
+    return y.reshape(G, E, C, nob * bs)

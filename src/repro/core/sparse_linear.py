@@ -127,6 +127,12 @@ def inject_update_ctx(params, slots, hyp):
                 else:
                     out[k] = v
             if is_junction(p):
+                if is_quantized(p):
+                    raise ValueError(
+                        "fused-update context injected into a quantized "
+                        "junction — the int8/fxp datapath is "
+                        "inference-only; reload full-precision weights "
+                        "to train")
                 idx = p["idx"] if "idx" in p else p["idx_in"]
                 stack = idx.shape[:-2]   # leading layer-scan dims
                 out[UPDATE_HYP_LEAF] = jnp.broadcast_to(
@@ -152,6 +158,13 @@ def inject_update_ctx(params, slots, hyp):
 
 def is_sparse(params: Params) -> bool:
     return "idx" in params
+
+
+def is_quantized(params) -> bool:
+    """A junction whose fp weight leaves were replaced by integer codes
+    at load time (core/quantize.py): inference-only — the fused-update
+    injector and the train paths refuse these dicts."""
+    return isinstance(params, dict) and ("wq" in params or "wgq" in params)
 
 
 def init_dense(key, n_in: int, n_out: int, *, bias: bool = False,
@@ -256,6 +269,10 @@ def apply(params: Params, x: jax.Array, *, engine: str = "auto",
     backward returns the updated params as the weight cotangents."""
     if not is_sparse(params):
         return _with_act(apply_dense(params, x), act)
+    quantized = is_quantized(params)
+    if quantized and UPDATE_HYP_LEAF in params:
+        raise ValueError("quantized junction inside a fused train step — "
+                         "the int8/fxp datapath is inference-only")
     if resolve_engine(engine) == "pallas":
         from repro.kernels import ops  # local import: kernels optional at runtime
         if UPDATE_HYP_LEAF in params:
@@ -266,16 +283,26 @@ def apply(params: Params, x: jax.Array, *, engine: str = "auto",
                 mom=params.get("mom_w"), mom_b=params.get("mom_b"),
                 vel=params.get("vel_w"), vel_b=params.get("vel_b"),
                 health=params.get(UPDATE_HEALTH_LEAF))
+        if quantized:
+            return ops.junction_matmul(
+                x, params["wq"], params["idx"], params["rev_ob"],
+                params["rev_t"], params["rev_cnt"], bias=params.get("b"),
+                act=act, w_scale=params.get("w_scale"),
+                x_scale=params.get("x_scale"), qfmt=params.get("qfmt"),
+                qlut=params.get("qlut"))
         return ops.junction_matmul(
             x, params["w"], params["idx"], params["rev_ob"], params["rev_t"],
             params["rev_cnt"], bias=params.get("b"), act=act)
+    if quantized:
+        from repro.core import quantize as qz  # local: avoids import cycle
+        return qz.apply_quant_jnp(params, x, act=act)
     return _with_act(apply_jnp(params, x), act)
 
 
 def density(params: Params) -> float:
     if not is_sparse(params):
         return 1.0
-    kb = params["w"].shape[1]
+    kb = (params["w"] if "w" in params else params["wq"]).shape[1]
     # rev_ob's leading dim IS n_in_blocks (built per input block by
     # reverse_block_pattern) — a static shape, so no host sync in jitted
     # contexts, and exact even when the highest input block is unused.
@@ -284,4 +311,5 @@ def density(params: Params) -> float:
 
 
 def n_weights(params: Params) -> int:
-    return int(np.prod(params["w"].shape))
+    return int(np.prod((params["w"] if "w" in params
+                        else params["wq"]).shape))

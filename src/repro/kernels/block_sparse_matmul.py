@@ -145,6 +145,40 @@ an exact-zero update) exist so an all-zero hyp row freezes a unit under
 EITHER optimizer; with real hyperparameters the guards are inert and
 the math matches ``optim.adam``'s two-pass update to fp32 round-off.
 
+Quantized inference variants (PR 8)
+-----------------------------------
+
+``fwd_int8`` / ``gated_fwd_int8`` / ``fwd_fxp`` are forward-only twins
+of ``fwd``/``gated_fwd`` for post-training-quantized weights
+(``core/quantize.py`` builds the operands at checkpoint-load time; no
+custom_vjp — ``junction_train_update`` refuses integer codes):
+
+* **fwd_int8** — weights arrive as int8 codes with symmetric per-block
+  scales ``w_scale [E, nob, kb]`` riding scalar prefetch EXACTLY like
+  the pattern leaves (per-unit "unit" granularity is the same layout,
+  broadcast at quantize time — one kernel contract).  Per fan-in slot
+  the activation tile is quantized in-body (dynamic per-row absmax/127,
+  or a calibrated static per-unit ``x_scale [E]`` prefetch leaf), the
+  int8×int8 dot accumulates exactly in int32 on the MXU, and the
+  dequant ``p * (sx * w_scale[e, ob, k])`` lands in the SAME fp32 VMEM
+  scratch reduction slot the fp forward uses — bias + activation
+  epilogue unchanged.  The multiplication grouping and per-k
+  accumulation order are mirrored op-for-op by the jnp sim
+  (``core/quantize.apply_quant_jnp``) so engine parity is exact.
+* **fwd_fxp** — the paper's full fixed-point pipeline: activations are
+  encoded in-body to the bit-triplet grid (``round(x * 2^bf)``,
+  saturated), products accumulate in an **int32** VMEM scratch, and the
+  epilogue is round-half-up shift by bf → saturate → bias ``q_add`` →
+  VMEM-resident LUT activation (``jnp.take`` over the full 2^bw-entry
+  table, indexed by two's-complement code — the BRAM sigmoid table).
+  ``qfmt = [bf, bn_bits]`` rides as a traced i32 scalar-prefetch leaf;
+  the saturate bound is static from the LUT length.  The runtime
+  ``act`` is ignored — the LUT (baked at quantize time) IS the
+  activation.
+* **gated_fwd_int8** — both expert branches dotted in int8 with
+  per-branch scale prefetch leaves, shared in-body activation codes,
+  two fp32 scratch accumulators, ``silu(g) * u`` epilogue unchanged.
+
 Tile tuning — one table for every configuration
 -----------------------------------------------
 
@@ -480,6 +514,225 @@ def gated_fwd(x, wg, wi, idx, *, bm: int | None = None,
         interpret=interpret,
     )(idx, x, wg, wi)
     return (outs[0], outs[1], outs[2]) if save_res else (outs[0], None, None)
+
+
+# ------------------------------------------------------ quantized forward
+def _slot_x_scale(xk, xs):
+    """In-kernel activation quantization scale for one gathered fan-in
+    slot: dynamic per-row absmax/127 (never looks across the row tile,
+    so it is bitwise engine-independent), or the calibrated static
+    per-unit scale."""
+    if xs is None:
+        ax = jnp.max(jnp.abs(xk), axis=-1, keepdims=True)
+        return jnp.where(ax == 0.0, 1.0, ax / 127.0)
+    return xs
+
+
+def fwd_int8(x, wq, idx, w_scale, bias, *, act: str = "none",
+             x_scale=None, bm: int | None = None, bn: int | None = None,
+             interpret: bool = False):
+    """int8 forward: x [E, M, nib*bs] fp, wq [E, nob, kb, bs, bs] int8,
+    shared idx [nob, kb], w_scale [E, nob, kb] f32 on scalar prefetch,
+    bias [E, nob*bs] -> act(dequant(xq @ wq) + b) [E, M, nob*bs].
+    Optional x_scale [E] f32 switches activation quantization from
+    dynamic per-row to calibrated static per-unit."""
+    E, M, _ = x.shape
+    _, nob, kb, bs, _ = wq.shape
+    nib = x.shape[2] // bs
+    cbm, cbn = choose_tiles(M, nob, kb, bs, nib, x.dtype.itemsize, E=E)
+    bm = cbm if bm is None else bm
+    bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
+    has_xs = x_scale is not None
+
+    def fwd_int8_kernel(*refs):
+        if has_xs:
+            idx_ref, sc_ref, xs_ref, x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+        else:
+            idx_ref, sc_ref, x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+        e = pl.program_id(0)
+        ob0 = pl.program_id(2) * bn
+        for j in range(bn):
+            acc = jnp.zeros((bm, bs), jnp.float32)
+            for k in range(kb):
+                ib = idx_ref[ob0 + j, k]
+                xk = x_ref[0, :, pl.ds(ib * bs, bs)].astype(jnp.float32)
+                sx = _slot_x_scale(xk, xs_ref[e] if has_xs else None)
+                xq = jnp.clip(jnp.round(xk / sx), -127, 127
+                              ).astype(jnp.int8)
+                p = jnp.dot(xq, w_ref[0, j, k],
+                            preferred_element_type=jnp.int32)
+                # dequant into the fp32 reduction slot; grouping matches
+                # the jnp sim exactly (see core/quantize._int8_apply)
+                acc = acc + p.astype(jnp.float32) * (
+                    sx * sc_ref[e, ob0 + j, k])
+            acc_ref[:, j * bs:(j + 1) * bs] = acc
+        s = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[0] = act_fwd(s, act).astype(o_ref.dtype)
+
+    prefetch = (idx, w_scale) + ((x_scale,) if has_xs else ())
+    out = pl.pallas_call(
+        fwd_int8_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(prefetch),
+            grid=(E, M // bm, nob // bn),
+            in_specs=[
+                pl.BlockSpec((1, bm, nib * bs), lambda e, m, o, *_: (e, m, 0)),
+                pl.BlockSpec((1, bn, kb, bs, bs),
+                             lambda e, m, o, *_: (e, o, 0, 0, 0)),
+                pl.BlockSpec((1, bn * bs), lambda e, m, o, *_: (e, o)),
+            ],
+            out_specs=[pl.BlockSpec((1, bm, bn * bs),
+                                    lambda e, m, o, *_: (e, m, o))],
+            scratch_shapes=[pltpu.VMEM((bm, bn * bs), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((E, M, nob * bs), x.dtype)],
+        interpret=interpret,
+    )(*prefetch, x, wq, bias)
+    return out[0]
+
+
+def fwd_fxp(x, wq, idx, qfmt, lut, bias, *, bm: int | None = None,
+            bn: int | None = None, interpret: bool = False):
+    """Full fixed-point forward: wq [E, nob, kb, bs, bs] int32 triplet
+    codes, qfmt [2] i32 = [bf, bn_bits] on scalar prefetch, lut [2^bw]
+    f32 VMEM-resident activation table, bias [E, nob*bs] fp (snapped to
+    the grid at quantize time).  Activations encode in-body; the int32
+    accumulation + round-half-up shift + saturate + bias q_add + LUT
+    epilogue is bit-exact fixed-point arithmetic — no runtime act."""
+    E, M, _ = x.shape
+    _, nob, kb, bs, _ = wq.shape
+    nib = x.shape[2] // bs
+    T = lut.shape[0]
+    lim = T // 2   # static saturate bound: 2^(bn_bits + bf)
+    cbm, cbn = choose_tiles(M, nob, kb, bs, nib, x.dtype.itemsize, E=E)
+    bm = cbm if bm is None else bm
+    bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
+
+    def fwd_fxp_kernel(idx_ref, qf_ref, x_ref, w_ref, b_ref, lut_ref,
+                       o_ref, acc_ref):
+        bf = qf_ref[0]
+        scale = jnp.exp2(bf.astype(jnp.float32))
+        ob0 = pl.program_id(2) * bn
+        for j in range(bn):
+            acc = jnp.zeros((bm, bs), jnp.int32)
+            for k in range(kb):
+                ib = idx_ref[ob0 + j, k]
+                xk = x_ref[0, :, pl.ds(ib * bs, bs)].astype(jnp.float32)
+                xq = jnp.clip(jnp.round(xk * scale), -lim, lim - 1
+                              ).astype(jnp.int32)
+                acc = acc + jnp.dot(xq, w_ref[0, j, k],
+                                    preferred_element_type=jnp.int32)
+            acc_ref[:, j * bs:(j + 1) * bs] = acc
+        half = jnp.left_shift(jnp.int32(1), bf - 1)
+        s = jnp.right_shift(acc_ref[...] + half, bf)   # round half up
+        s = jnp.clip(s, -lim, lim - 1)                 # saturating adder
+        bcode = jnp.clip(jnp.round(b_ref[...].astype(jnp.float32) * scale),
+                         -lim, lim - 1).astype(jnp.int32)
+        s = jnp.clip(s + bcode, -lim, lim - 1)         # q_add
+        o_ref[0] = jnp.take(lut_ref[...], jnp.bitwise_and(s, T - 1),
+                            axis=0).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        fwd_fxp_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(E, M // bm, nob // bn),
+            in_specs=[
+                pl.BlockSpec((1, bm, nib * bs), lambda e, m, o, *_: (e, m, 0)),
+                pl.BlockSpec((1, bn, kb, bs, bs),
+                             lambda e, m, o, *_: (e, o, 0, 0, 0)),
+                pl.BlockSpec((1, bn * bs), lambda e, m, o, *_: (e, o)),
+                # the whole activation table, VMEM-resident every step
+                pl.BlockSpec((T,), lambda e, m, o, *_: (0,)),
+            ],
+            out_specs=[pl.BlockSpec((1, bm, bn * bs),
+                                    lambda e, m, o, *_: (e, m, o))],
+            scratch_shapes=[pltpu.VMEM((bm, bn * bs), jnp.int32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((E, M, nob * bs), x.dtype)],
+        interpret=interpret,
+    )(idx, qfmt, x, wq, bias, lut)
+    return out[0]
+
+
+def gated_fwd_int8(x, wgq, wiq, idx, wg_scale, wi_scale, *, x_scale=None,
+                   bm: int | None = None, bn: int | None = None,
+                   interpret: bool = False):
+    """int8 twin of gated_fwd: silu(dequant(xq @ wgq)) * dequant(xq @
+    wiq) — shared in-body activation codes, per-branch scale prefetch
+    leaves [E, nob, kb], two fp32 scratch accumulators."""
+    E, M, _ = x.shape
+    _, nob, kb, bs, _ = wgq.shape
+    nib = x.shape[2] // bs
+    cbm, cbn = choose_tiles(M, nob, kb, bs, nib, x.dtype.itemsize, E=E,
+                            n_weight_operands=2)
+    bm = cbm if bm is None else bm
+    bn = cbn if bn is None else bn
+    if nob % bn:
+        bn = 1
+    assert M % bm == 0, f"M={M} must be a multiple of bm={bm} (pad in ops.py)"
+    has_xs = x_scale is not None
+
+    def gated_fwd_int8_kernel(*refs):
+        if has_xs:
+            (idx_ref, scg_ref, sci_ref, xs_ref, x_ref, wg_ref, wi_ref,
+             h_ref, accg_ref, accu_ref) = refs
+        else:
+            (idx_ref, scg_ref, sci_ref, x_ref, wg_ref, wi_ref,
+             h_ref, accg_ref, accu_ref) = refs
+        e = pl.program_id(0)
+        ob0 = pl.program_id(2) * bn
+        for j in range(bn):
+            ag = jnp.zeros((bm, bs), jnp.float32)
+            au = jnp.zeros((bm, bs), jnp.float32)
+            for k in range(kb):
+                ib = idx_ref[ob0 + j, k]
+                xk = x_ref[0, :, pl.ds(ib * bs, bs)].astype(jnp.float32)
+                sx = _slot_x_scale(xk, xs_ref[e] if has_xs else None)
+                xq = jnp.clip(jnp.round(xk / sx), -127, 127
+                              ).astype(jnp.int8)
+                pg = jnp.dot(xq, wg_ref[0, j, k],
+                             preferred_element_type=jnp.int32)
+                pu = jnp.dot(xq, wi_ref[0, j, k],
+                             preferred_element_type=jnp.int32)
+                ag = ag + pg.astype(jnp.float32) * (
+                    sx * scg_ref[e, ob0 + j, k])
+                au = au + pu.astype(jnp.float32) * (
+                    sx * sci_ref[e, ob0 + j, k])
+            accg_ref[:, j * bs:(j + 1) * bs] = ag
+            accu_ref[:, j * bs:(j + 1) * bs] = au
+        g = accg_ref[...]
+        u = accu_ref[...]
+        h_ref[0] = (act_fwd(g, "silu") * u).astype(h_ref.dtype)
+
+    prefetch = (idx, wg_scale, wi_scale) + ((x_scale,) if has_xs else ())
+    out = pl.pallas_call(
+        gated_fwd_int8_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(prefetch),
+            grid=(E, M // bm, nob // bn),
+            in_specs=[
+                pl.BlockSpec((1, bm, nib * bs), lambda e, m, o, *_: (e, m, 0)),
+                pl.BlockSpec((1, bn, kb, bs, bs),
+                             lambda e, m, o, *_: (e, o, 0, 0, 0)),
+                pl.BlockSpec((1, bn, kb, bs, bs),
+                             lambda e, m, o, *_: (e, o, 0, 0, 0)),
+            ],
+            out_specs=[pl.BlockSpec((1, bm, bn * bs),
+                                    lambda e, m, o, *_: (e, m, o))],
+            scratch_shapes=[pltpu.VMEM((bm, bn * bs), jnp.float32),
+                            pltpu.VMEM((bm, bn * bs), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((E, M, nob * bs), x.dtype)],
+        interpret=interpret,
+    )(*prefetch, x, wgq, wiq)
+    return out[0]
 
 
 # ------------------------------------------------------------------ dx

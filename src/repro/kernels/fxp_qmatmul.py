@@ -7,7 +7,8 @@ accumulate exactly in int32 (codes fit 16 bits, so a 128-deep dot is
 exact), then one round-half-up shift by b_f and a saturate to the triplet
 range.  This is what an int8/int16 MXU path does on real hardware — the
 FPGA's per-node clipping tree is kept bit-exact in core/fixed_point.py and
-the two are compared in benchmarks/bitwidth.py.
+the two are compared in benchmarks/paper_benches.py (the Table II
+bit-width rows, ``table2_bitwidth``).
 """
 from __future__ import annotations
 
@@ -40,20 +41,30 @@ def _kernel(bf: int, bn: int, nk: int, a_ref, w_ref, o_ref, acc_ref):
 
 def qmatmul(a_code, w_code, *, bf: int, bn: int, bm: int = 128,
             bn_tile: int = 128, bk: int = 128, interpret: bool = False):
-    """a [M, K] int32 codes, w [K, N] int32 codes -> [M, N] int32 codes."""
+    """a [M, K] int32 codes, w [K, N] int32 codes -> [M, N] int32 codes.
+
+    Ragged shapes pad to the tile and slice back (zero codes contribute
+    exact zeros to the integer accumulation, so padding is free)."""
     M, K = a_code.shape
     N = w_code.shape[1]
-    assert M % bm == 0 and K % bk == 0 and N % bn_tile == 0
-    grid = (M // bm, N // bn_tile, K // bk)
-    return pl.pallas_call(
-        functools.partial(_kernel, bf, bn, K // bk),
+    pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn_tile
+    if pm or pk:
+        a_code = jnp.pad(a_code, ((0, pm), (0, pk)))
+    if pk or pn:
+        w_code = jnp.pad(w_code, ((0, pk), (0, pn)))
+    Mp, Kp = a_code.shape
+    Np = w_code.shape[1]
+    grid = (Mp // bm, Np // bn_tile, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bf, bn, Kp // bk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
             pl.BlockSpec((bk, bn_tile), lambda m, n, k: (k, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn_tile), lambda m, n, k: (m, n)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn_tile), jnp.int32)],
         interpret=interpret,
     )(a_code, w_code)
+    return out[:M, :N] if (pm or pn) else out

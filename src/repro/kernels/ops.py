@@ -67,14 +67,6 @@ def resolve_engine(engine: str) -> str:
     raise ValueError(f"unknown engine {engine!r} (pallas | jnp | auto)")
 
 
-def _pad_rows(x, bm):
-    M = x.shape[0]
-    pad = (-M) % bm
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    return x, M
-
-
 # --------------------------------------------------------- junction matmul
 class KernelSpec(NamedTuple):
     """Static (hashable) configuration of the unified junction custom_vjp:
@@ -87,6 +79,10 @@ class KernelSpec(NamedTuple):
     has_bias: bool
     interpret: bool
     with_health: bool = False   # fused update emits the [E] divergence flags
+    # "none" | "int8" | "fxp" — the quantized-inference configurations
+    # (core/quantize.py).  Quantized specs are forward-only: they bypass
+    # the custom_vjp entirely and junction_train_update refuses them.
+    quant: str = "none"
 
 
 def _fwd_call(spec, x, ws, b, idx, save: bool):
@@ -226,7 +222,9 @@ _junction_update_core.defvjp(_junction_update_fwd, _junction_update_bwd)
 
 def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
                     act: str = "none", interpret: bool | None = None,
-                    bm: int | None = None, bn: int | None = None):
+                    bm: int | None = None, bn: int | None = None,
+                    w_scale=None, wi_scale=None, x_scale=None,
+                    qfmt=None, qlut=None):
     """The unified junction: y = act(x @ W_sparse + bias) through the
     pre-defined block pattern, every configuration through ONE custom_vjp.
 
@@ -239,11 +237,27 @@ def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
     * ``wi=`` (same shape as w): fused SwiGLU gate
       ``silu(x @ w) * (x @ wi)`` — one forward pass, two-branch fused
       backward; ``act``/``bias`` must stay at their defaults.
+    * quantized inference (``core/quantize.py`` leaves): ``w_scale``
+      (``[nob, kb]`` / ``[E, nob, kb]`` — with ``wi_scale`` for the
+      gate) selects the int8 path with optional calibrated ``x_scale``;
+      ``qfmt`` + ``qlut`` select full fixed-point (plain junctions
+      only, LUT replaces ``act``).  These specs are FORWARD-ONLY — no
+      custom_vjp; differentiate the fp junction instead.
     """
     interpret = _auto_interpret() if interpret is None else interpret
     gated = wi is not None
     if gated and (bias is not None or act != "none"):
         raise ValueError("gated junction fixes act=silu-gate and takes no bias")
+    if qfmt is not None or w_scale is not None:
+        return _junction_quant(x, w, idx, wi=wi, bias=bias, act=act,
+                               interpret=interpret, bm=bm, bn=bn,
+                               w_scale=w_scale, wi_scale=wi_scale,
+                               x_scale=x_scale, qfmt=qfmt, qlut=qlut)
+    if jnp.issubdtype(w.dtype, jnp.integer):
+        raise ValueError(
+            "integer-code weights need their quantization leaves "
+            "(w_scale for int8, qfmt+qlut for fixed point) — refusing to "
+            "cast codes to floats silently")
     single, lead, x3, w5, wi5, b2, E, M, nob, bs, bm, bn = _prep_junction(
         x, w, wi, bias, bm, bn, gated)
     b = (jnp.zeros((E, nob * bs), x.dtype) if b2 is None
@@ -253,6 +267,50 @@ def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
     spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
                       has_bias=bias is not None, interpret=interpret)
     y = _junction_core(spec, x3, ws, b, idx, rev_ob, rev_t, rev_cnt)
+    y = y[:, :M]
+    return y.reshape(*lead, nob * bs) if single else y
+
+
+def _junction_quant(x, w, idx, *, wi, bias, act, interpret, bm, bn,
+                    w_scale, wi_scale, x_scale, qfmt, qlut):
+    """Forward-only dispatch of the quantized KernelSpec configurations:
+    same shape lifting / tile selection / row padding as the fp path,
+    scales and codes lifted alongside, then a DIRECT call into the
+    quantized forward kernels — no custom_vjp, nothing to differentiate."""
+    gated = wi is not None
+    fxp_mode = qfmt is not None
+    if fxp_mode and gated:
+        raise ValueError("fxp quantization covers plain junctions only — "
+                         "the gate epilogue has no single-LUT fixed-point "
+                         "form; use the int8 path for gated junctions")
+    if fxp_mode and qlut is None:
+        raise ValueError("fxp mode needs the baked activation table (qlut)")
+    if not fxp_mode and gated and wi_scale is None:
+        raise ValueError("gated int8 junction needs wi_scale for the "
+                         "second branch")
+    single, lead, x3, w5, wi5, b2, E, M, nob, bs, bm, bn = _prep_junction(
+        x, w, wi, bias, bm, bn, gated)
+    spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
+                      has_bias=bias is not None, interpret=interpret,
+                      quant="fxp" if fxp_mode else "int8")
+    lift = lambda s: None if s is None else (s[None] if single else s)
+    # bias stays fp32 into the quant kernels (the fxp epilogue re-encodes
+    # it on the triplet grid; a compute-dtype cast could move the code)
+    b = (jnp.zeros((E, nob * bs), jnp.float32) if b2 is None
+         else b2.astype(jnp.float32))
+    xs = (None if x_scale is None
+          else jnp.asarray(x_scale, jnp.float32).reshape(-1))
+    if spec.quant == "fxp":
+        y = bsm.fwd_fxp(x3, w5, idx, qfmt, qlut, b, bm=spec.bm, bn=spec.bn,
+                        interpret=spec.interpret)
+    elif spec.gated:
+        y = bsm.gated_fwd_int8(x3, w5, wi5, idx, lift(w_scale),
+                               lift(wi_scale), x_scale=xs, bm=spec.bm,
+                               bn=spec.bn, interpret=spec.interpret)
+    else:
+        y = bsm.fwd_int8(x3, w5, idx, lift(w_scale), b, act=spec.act,
+                         x_scale=xs, bm=spec.bm, bn=spec.bn,
+                         interpret=spec.interpret)
     y = y[:, :M]
     return y.reshape(*lead, nob * bs) if single else y
 
@@ -342,6 +400,12 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
     gated = wi is not None
     if gated and (bias is not None or act != "none"):
         raise ValueError("gated junction fixes act=silu-gate and takes no bias")
+    if jnp.issubdtype(w.dtype, jnp.integer) or (
+            gated and jnp.issubdtype(wi.dtype, jnp.integer)):
+        raise ValueError(
+            "junction_train_update refuses quantized (integer-code) "
+            "weights — the int8/fxp datapath is inference-only; reload "
+            "full-precision weights to train")
     if w.dtype != x.dtype or (gated and wi.dtype != x.dtype) or (
             bias is not None and bias.dtype != x.dtype):
         raise ValueError(
@@ -428,24 +492,14 @@ def expert_gated_matmul(x, wg, wi, idx, rev_ob, rev_t, rev_cnt,
 def fxp_qmatmul(a_code, w_code, *, bf: int, bn: int,
                 interpret: bool | None = None):
     interpret = _auto_interpret() if interpret is None else interpret
-    a2, M = _pad_rows(a_code, 128)
-    K = a2.shape[1]
-    pad_k = (-K) % 128
-    if pad_k:
-        a2 = jnp.pad(a2, ((0, 0), (0, pad_k)))
-        w_code = jnp.pad(w_code, ((0, pad_k), (0, 0)))
-    N = w_code.shape[1]
-    pad_n = (-N) % 128
-    if pad_n:
-        w_code = jnp.pad(w_code, ((0, 0), (0, pad_n)))
-    y = fxpk.qmatmul(a2, w_code, bf=bf, bn=bn, interpret=interpret)
-    return y[:M, :N]
+    # ragged shapes pad to the tile inside the kernel wrapper
+    return fxpk.qmatmul(a_code, w_code, bf=bf, bn=bn, interpret=interpret)
 
 
 # ------------------------------------------------------------ LUT sigmoid
 def sigmoid_lut(codes, table, interpret: bool | None = None):
     interpret = _auto_interpret() if interpret is None else interpret
     lead = codes.shape[:-1]
-    c2, M = _pad_rows(codes.reshape(-1, codes.shape[-1]), 256)
-    y = slut.lut_lookup(c2, table, interpret=interpret)
-    return y[:M].reshape(*lead, codes.shape[-1])
+    y = slut.lut_lookup(codes.reshape(-1, codes.shape[-1]), table,
+                        interpret=interpret)
+    return y.reshape(*lead, codes.shape[-1])

@@ -20,12 +20,18 @@ def _kernel(code_ref, table_ref, o_ref):
 
 
 def lut_lookup(codes, table, *, bm: int = 256, interpret: bool = False):
-    """codes [M, N] int32 in [0, len(table)); table [T] f32 -> [M, N] f32."""
+    """codes [M, N] int32 in [0, len(table)); table [T] f32 -> [M, N] f32.
+
+    A ragged M pads to the row tile and slices back (padding code 0 just
+    gathers table[0] into rows that are discarded)."""
     M, N = codes.shape
     T = table.shape[0]
-    assert M % bm == 0, f"M={M} % bm={bm}"
-    grid = (M // bm,)
-    return pl.pallas_call(
+    pm = (-M) % bm
+    if pm:
+        codes = jnp.pad(codes, ((0, pm), (0, 0)))
+    Mp = M + pm
+    grid = (Mp // bm,)
+    out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -33,6 +39,7 @@ def lut_lookup(codes, table, *, bm: int = 256, interpret: bool = False):
             pl.BlockSpec((T,), lambda m: (0,)),   # whole table resident
         ],
         out_specs=pl.BlockSpec((bm, N), lambda m: (m, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, N), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), table.dtype),
         interpret=interpret,
     )(codes, table)
+    return out[:M] if pm else out

@@ -1,0 +1,193 @@
+"""PTQ quality-vs-speed sweep riding the population engine.
+
+    PYTHONPATH=src python -m repro.launch.quant_sweep \
+        --bits 8,6,4 --granularities block,unit --steps 30 --out quant.json
+
+Trains ONE fp32 paper MLP briefly on MNIST (the population machinery's
+E=1 case), calibrates activation scales on a calibration batch (absmax /
+127), then sweeps quantization configs as POPULATIONS: every config in a
+cohort (search/cohorts.bucket_quant — int8 bit widths and scale
+granularities share array layouts) becomes one member of a stacked
+quantized population, evaluated E-at-once through the same
+``make_population_eval`` the hyperparameter sweep uses.  ``--fxp`` adds
+the paper's full fixed-point triplets (Table II) as their own cohorts
+(the int32 codes + per-format LUT are structural).
+
+The JSON ledger records per-config eval loss and timed eval latency and
+names the WINNER — the lowest finite-loss config — which ci.sh's
+quantized smoke stage asserts exists.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _floats(s):
+    return tuple(float(v) for v in s.split(",") if v)
+
+
+def _ints(s):
+    return tuple(int(v) for v in s.split(",") if v)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", default="8,6,4", help="int8-container code "
+                    "widths to sweep (comma-separated, 2..8)")
+    ap.add_argument("--granularities", default="block,unit")
+    ap.add_argument("--fxp", action="store_true",
+                    help="also sweep the paper's fixed-point triplets")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="static per-unit activation scales from a "
+                         "calibration batch (default: dynamic per-row)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--lr", type=float, default=0.5)
+    ap.add_argument("--density", type=float, default=0.25)
+    ap.add_argument("--hidden", type=int, default=512)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--samples", type=int, default=2048)
+    ap.add_argument("--eval-samples", type=int, default=512)
+    ap.add_argument("--calib-samples", type=int, default=256)
+    ap.add_argument("--engine", default="auto")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tag", default="quant")
+    ap.add_argument("--out", default=None, help="JSON ledger path")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import quantize as qz
+    from repro.core import sparse_linear as sl
+    from repro.core.fixed_point import PAPER_TRIPLETS
+    from repro.data.mnist import paper_dataset
+    from repro.search import (CandidateSpec, bucket_quant, hyp_table,
+                              init_population, init_slots,
+                              make_population_eval, make_population_step)
+
+    engine = sl.resolve_engine(args.engine)
+    act = "sigmoid"
+    out_w = -(-32 // args.block) * args.block
+    layers = (1024, args.hidden, out_w)
+
+    # ---------------------------------------------- 1. brief fp training
+    spec = CandidateSpec(lr=args.lr, momentum=0.9, density=args.density,
+                         layers=layers, block=args.block, act=act,
+                         seed=args.seed)
+    pop = init_population(jax.random.PRNGKey(args.seed), [spec])
+    slots = init_slots(pop, [spec])
+    hyp = hyp_table([spec])
+    mask = jnp.ones((1,), jnp.float32)
+    n = args.samples + args.eval_samples + args.calib_samples
+    x, t, _ = paper_dataset(n=n, seed=args.seed)
+    if t.shape[1] < out_w:   # zero-pad the one-hot to the output width
+        t = np.concatenate(
+            [t, np.zeros((t.shape[0], out_w - t.shape[1]), t.dtype)], axis=1)
+    xtr, ttr = x[:args.samples], t[:args.samples]
+    xev, tev = (x[args.samples:args.samples + args.eval_samples],
+                t[args.samples:args.samples + args.eval_samples])
+    xcal = x[args.samples + args.eval_samples:]
+    step = make_population_step(act, engine=engine, fused=True)
+    rng = np.random.default_rng(args.seed)
+    print(f"[quant-sweep] fp pre-train: {args.steps} steps, "
+          f"layers={layers}, engine={engine}")
+    for _ in range(args.steps):
+        sel = rng.integers(0, args.samples, size=args.batch)
+        pop, slots, _ = step(pop, slots, hyp, mask, xtr[sel], ttr[sel])
+    fp_layers = [jax.tree.map(lambda v: v, layer) for layer in pop]
+    fp_layers = [{k: (v[0] if k in ("w", "b") else v)
+                  for k, v in layer.items()} for layer in fp_layers]
+
+    evaluate = make_population_eval(act, engine=engine)
+    fp_loss = float(evaluate(pop, xev, tev)[0])
+    print(f"[quant-sweep] fp32 eval loss {fp_loss:.5f}")
+
+    # ---------------------------------------------------- 2. calibration
+    x_scales = (qz.calibrate_layer_scales(fp_layers, xcal, act=act)
+                if args.calibrate else None)
+    if x_scales is not None:
+        print(f"[quant-sweep] calibrated x scales: "
+              f"{[round(s, 5) for s in x_scales]}")
+
+    # ------------------------------------------------ 3. the config grid
+    configs = [qz.QuantConfig(mode="int8", bits=b, granularity=g)
+               for b in _ints(args.bits)
+               for g in args.granularities.split(",")]
+    if args.fxp:
+        configs += [qz.QuantConfig(mode="fxp", fmt=f, act=act)
+                    for f in PAPER_TRIPLETS]
+    cohorts = bucket_quant(configs)
+    print(f"[quant-sweep] {len(configs)} configs in {len(cohorts)} "
+          f"cohort(s); datapath: quantized junction kernels "
+          f"({'static' if args.calibrate else 'dynamic'} activation "
+          f"scales)")
+
+    def quantize_member(q):
+        out = []
+        for li, layer in enumerate(fp_layers):
+            xs = None
+            if q.mode == "int8" and x_scales is not None:
+                xs = x_scales[li]
+            out.append(qz.quantize_junction(layer, q, x_scale=xs))
+        return out
+
+    def stack_members(members):
+        """E per-config quantized layer lists -> one stacked population
+        (codes/scales/bias per member, patterns + fxp format shared)."""
+        popq = []
+        for li in range(len(members[0])):
+            base = members[0][li]
+            layer = {k: base[k] for k in sl.PATTERN_LEAVES}
+            for k in ("qfmt", "qlut"):       # structural: cohort-shared
+                if k in base:
+                    layer[k] = base[k]
+            for k in ("wq", "w_scale", "b", "x_scale"):
+                if k in base:
+                    layer[k] = jnp.stack([m[li][k] for m in members])
+            popq.append(layer)
+        return popq
+
+    # ------------------------------------- 4. E-at-once eval per cohort
+    records = []
+    for co in cohorts:
+        popq = stack_members([quantize_member(q) for q in co.configs])
+        losses = evaluate(popq, xev, tev)
+        jax.block_until_ready(losses)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(evaluate(popq, xev, tev))
+        us = (time.perf_counter() - t0) / 3 * 1e6 / co.size
+        for slot, (q, cid) in enumerate(zip(co.configs, co.member_ids)):
+            loss = float(losses[slot])
+            records.append({"id": cid, "config": q.to_dict(),
+                            "cohort": list(map(str, co.key)),
+                            "eval_loss": loss,
+                            "us_per_member_eval": us,
+                            "delta_vs_fp32": loss - fp_loss})
+            print(f"[quant-sweep] {q.to_dict()} loss={loss:.5f} "
+                  f"({loss - fp_loss:+.5f} vs fp) {us:.0f}us/member")
+
+    finite = [r for r in records if np.isfinite(r["eval_loss"])]
+    winner = min(finite, key=lambda r: r["eval_loss"]) if finite else None
+    if winner is not None:
+        print(f"[quant-sweep] winner: {winner['config']} "
+              f"loss={winner['eval_loss']:.5f}")
+    else:
+        print("[quant-sweep] winner: none (no finite member)")
+
+    ledger = {"tag": args.tag, "engine": engine, "layers": list(layers),
+              "fp32_eval_loss": fp_loss, "calibrated": args.calibrate,
+              "records": records, "winner": winner}
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(ledger, f, indent=1)
+        print(f"[quant-sweep] ledger -> {args.out}")
+    return ledger
+
+
+if __name__ == "__main__":
+    main()

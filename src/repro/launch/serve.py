@@ -18,12 +18,19 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt", default=None,
                     help="restore params from a training checkpoint dir")
+    ap.add_argument("--sparse", action="store_true",
+                    help="apply the paper's pre-defined FFN sparsity")
+    ap.add_argument("--density", type=float, default=0.25)
+    ap.add_argument("--quantize", default=None, choices=["int8"],
+                    help="quantize sparse junction weights at load "
+                         "(int8 codes + per-block scales)")
     args = ap.parse_args()
 
     import numpy as np
     import jax
 
     from repro.configs import registry
+    from repro.core.sparsity import SparsityConfig
     from repro.models import model as M
     from repro.serve.engine import Engine, ServeConfig
     from repro.train import checkpoint as ckpt_mod
@@ -31,6 +38,10 @@ def main():
     cfg = registry.get(args.arch)
     if args.reduce:
         cfg = cfg.reduced()
+    if args.sparse:
+        block = 32 if args.reduce else 128
+        cfg = cfg.with_sparsity(SparsityConfig(
+            density=args.density, block=block, where="ffn"))
     params = M.init(cfg, jax.random.PRNGKey(0))
     if args.ckpt:
         opt_like = None
@@ -52,8 +63,14 @@ def main():
         extra["frames"] = rng.standard_normal(
             (args.requests, cfg.enc_frames, cfg.d_model)).astype(np.float32)
 
+    quant = args.quantize if (args.quantize and cfg.sparsity) else None
+    why = ("int8 junction kernels (per-block scales)" if quant
+           else "no sparse junctions to quantize" if args.quantize
+           else "full precision")
+    print(f"[serve] quantize={args.quantize or 'off'} datapath: {why}")
     eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.max_new,
-                                          temperature=args.temperature))
+                                          temperature=args.temperature,
+                                          quantize=quant))
     import time
     t0 = time.perf_counter()
     out = eng.generate(prompts, extra)

@@ -95,6 +95,10 @@ def main():
     ok, why = fused_update_eligible(cfg, opt, args.microbatches)
     print(f"[train] optim={args.optim} update path: "
           f"{'fused BP+UP' if ok else f'two-pass ({why})'}")
+    # quantization is inference-only (core/quantize.py): training always
+    # runs full-precision weights — state the datapath like the fused log
+    print("[train] quantize=off datapath: full precision "
+          "(int8/fxp junctions are inference-only — see launch/serve.py)")
 
     params = M.init(cfg, jax.random.PRNGKey(0))
     opt_state = opt.init(params)

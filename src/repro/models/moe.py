@@ -131,6 +131,20 @@ def _expert_ffn_pallas(p: Params, xd, E: int):
     from repro.kernels import ops  # local import: kernels optional at runtime
     G, _, C, D = xd.shape
     xe = jnp.moveaxis(xd, 1, 0).reshape(E, G * C, D)
+    if "wgq" in p:   # quantized experts (core/quantize.py): inference-only
+        if sl.UPDATE_HYP_LEAF in p:
+            raise ValueError("quantized expert FFN inside a fused train "
+                             "step — the int8 datapath is inference-only")
+        h = ops.junction_matmul(
+            xe, p["wgq"], p["idx_in"],
+            p["rev_in_ob"], p["rev_in_t"], p["rev_in_cnt"], wi=p["wiq"],
+            w_scale=p["wg_scale"], wi_scale=p["wi_scale"],
+            x_scale=p.get("x_scale_in"))
+        ye = ops.junction_matmul(
+            h, p["woq"], p["idx_out"],
+            p["rev_out_ob"], p["rev_out_t"], p["rev_out_cnt"],
+            w_scale=p["wo_scale"], x_scale=p.get("x_scale_out"))
+        return jnp.moveaxis(ye.reshape(E, G, C, -1), 0, 1)
     if sl.UPDATE_HYP_LEAF in p:
         hyp = p[sl.UPDATE_HYP_LEAF]
         h = ops.junction_train_update(
@@ -192,6 +206,15 @@ def moe_apply(p: Params, x, cfg: ArchConfig):
     if "idx_in" in p:   # pre-defined-sparse experts (the paper's technique)
         if sl.resolve_engine(cfg.engine) == "pallas":
             ye = _expert_ffn_pallas(p, xd, E)
+        elif "wgq" in p:   # quantized experts, jnp twin of the int8 kernels
+            from repro.core import quantize as qz
+            gq = qz.expert_apply_int8(p["wgq"], p["wg_scale"], p["idx_in"],
+                                      xd, p.get("x_scale_in"))
+            uq = qz.expert_apply_int8(p["wiq"], p["wi_scale"], p["idx_in"],
+                                      xd, p.get("x_scale_in"))
+            h = (jax.nn.silu(gq) * uq).astype(x.dtype)
+            ye = qz.expert_apply_int8(p["woq"], p["wo_scale"], p["idx_out"],
+                                      h, p.get("x_scale_out")).astype(x.dtype)
         else:
             h = (jax.nn.silu(_expert_apply(p["wg"], p["idx_in"], xd))
                  * _expert_apply(p["wi"], p["idx_in"], xd))

@@ -44,7 +44,7 @@ Modules: ``population`` (stacking, per-member hyp, E-batched steps),
 ``ledger`` (JSON lineage artifact).  ``launch/sweep.py`` is the CLI;
 ``configs.base.SweepConfig`` the knob set.
 """
-from repro.search.cohorts import Cohort, bucket
+from repro.search.cohorts import Cohort, QuantCohort, bucket, bucket_quant
 from repro.search.ledger import Ledger, MemberRecord
 from repro.search.population import (CandidateSpec, hyp_table,
                                      init_population, init_slots,
@@ -54,6 +54,7 @@ from repro.search.population import (CandidateSpec, hyp_table,
 from repro.search.scheduler import SweepResult, run_sweep
 
 __all__ = ["CandidateSpec", "Cohort", "Ledger", "MemberRecord",
-           "SweepResult", "bucket", "hyp_table", "init_population",
-           "init_slots", "make_population_eval", "make_population_step",
+           "QuantCohort", "SweepResult", "bucket", "bucket_quant",
+           "hyp_table", "init_population", "init_slots",
+           "make_population_eval", "make_population_step",
            "member_slice", "run_sweep", "structure_key"]

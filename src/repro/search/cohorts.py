@@ -53,3 +53,33 @@ def bucket(specs: Sequence[CandidateSpec]) -> list[Cohort]:
                    specs=tuple(specs[i] for i in ids),
                    member_ids=tuple(ids))
             for k, ids in groups.items()]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCohort:
+    """Same idea for quantization configs (launch/quant_sweep.py): the E
+    axis of one stacked quantized population is the set of configs that
+    share array layouts — int8 bit width and scale granularity vary
+    freely within a cohort (codes share the int8 container, scales share
+    the [E, nob, kb] layout), while the fxp bit triplet and baked LUT
+    activation are structural (int32 codes, per-format table)."""
+    key: tuple
+    configs: tuple
+    member_ids: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return len(self.configs)
+
+
+def bucket_quant(configs: Sequence) -> list[QuantCohort]:
+    """Group core/quantize.QuantConfig candidates by their quant
+    structure key, preserving order like :func:`bucket`."""
+    from repro.core.quantize import structure_key as quant_structure_key
+    groups: dict[tuple, list[int]] = {}
+    for i, q in enumerate(configs):
+        groups.setdefault(quant_structure_key(q), []).append(i)
+    return [QuantCohort(key=k,
+                        configs=tuple(configs[i] for i in ids),
+                        member_ids=tuple(ids))
+            for k, ids in groups.items()]

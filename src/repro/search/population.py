@@ -132,7 +132,8 @@ def member_slice(params, e: int):
 
 
 def population_size(params) -> int:
-    return params[0]["w"].shape[0]
+    p0 = params[0]
+    return (p0["w"] if "w" in p0 else p0["wq"]).shape[0]
 
 
 def hyp_table(specs: Sequence[CandidateSpec]) -> jax.Array:
@@ -202,10 +203,12 @@ def _apply_jnp(layer, x):
 
 
 def _layer_apply(layer, x, act: str, engine: str):
-    if engine == "pallas":
+    if engine == "pallas" or sl.is_quantized(layer):
         # sl.apply dispatches junction_matmul / junction_train_update
-        # (when the fused ctx rides in the dict) on the 5-D expert path
-        return sl.apply(layer, x, engine="pallas", act=act)
+        # (when the fused ctx rides in the dict) on the 5-D expert path;
+        # quantized layers (launch/quant_sweep.py populations) route
+        # through it on EITHER engine — it owns the int8/fxp dispatch
+        return sl.apply(layer, x, engine=engine, act=act)
     from repro.kernels import block_sparse_matmul as bsm
     y = _apply_jnp(layer, x)
     return bsm.act_fwd(y, act).astype(y.dtype) if act != "none" else y

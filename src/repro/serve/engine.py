@@ -31,6 +31,15 @@ class ServeConfig:
     # "auto"); None keeps the ArchConfig's setting.  The step builders
     # resolve "auto" to the Pallas engine on TPU backends.
     engine: str | None = None
+    # quantize-at-load: "int8" converts every sparse junction's weights
+    # to int8 codes + per-block scales (core/quantize.quantize_tree) the
+    # moment the engine takes the params — decode then runs the int8
+    # junction kernels; dense layers (attention, embeddings) stay fp.
+    # None serves full precision.  "fxp" is refused here: the LUT bakes
+    # ONE activation per junction at quantize time, which fits the paper
+    # MLP / population path (launch/quant_sweep.py), not a transformer
+    # FFN stack.
+    quantize: str | None = None
     # divergence guard: a slot whose logits go non-finite (corrupted
     # weights, poisoned cache) is terminated — EOS-filled and masked out
     # like a finished sequence — instead of sampling garbage into the
@@ -45,6 +54,15 @@ class Engine:
         if self.scfg.engine is not None:
             cfg = dataclasses.replace(cfg, engine=self.scfg.engine)
         self.cfg = cfg
+        if self.scfg.quantize:
+            if self.scfg.quantize != "int8":
+                raise ValueError(
+                    f"ServeConfig.quantize={self.scfg.quantize!r} — serving "
+                    "supports 'int8' only (fxp bakes one LUT activation "
+                    "per junction; see launch/quant_sweep.py for that "
+                    "path)")
+            from repro.core import quantize as qz
+            params = qz.quantize_tree(params, qz.QuantConfig(mode="int8"))
         self.params = params
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
