@@ -1,0 +1,127 @@
+"""Serving-path benchmarks: static step-locked batches vs the
+continuous-batching engine (ISSUE 9).
+
+One mixed-length arrival trace — a few long-output requests scattered
+among short ones, more requests than decode slots — served two ways:
+
+* ``bench.serve.static`` — FIFO groups of ``slots`` requests through the
+  static ``Engine``: prompts padded to the group max, every slot decodes
+  to the group's max max_new (finished slots burn masked scratch steps).
+  A group is as slow as its longest member, and the next group waits.
+* ``bench.serve.continuous`` — the same trace through
+  ``ContinuousEngine``: a slot frees the moment its request finishes and
+  is refilled from the queue mid-flight over the paged KV pool.
+
+``us_per_call`` is microseconds per *useful* generated token (each
+request's own max_new — the tokens the client asked for, not the padded
+work the static engine burns), so the two rows are directly comparable;
+``derived`` carries the p50/p99 request latency.  Both engines run
+engine="jnp" (portable timings; the Pallas decode kernel's interpret
+mode off-TPU is an emulator, not a measurement) and both are timed on a
+second full pass so compilation is excluded.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.sparsity import SparsityConfig
+
+# trace shape: LONG_EVERY-th request wants a long output, the rest short.
+SLOTS = 4
+LONG_EVERY = 4
+
+
+def _cfg():
+    return ArchConfig(
+        name="bench-serve", family="dense", n_layers=2, d_model=128,
+        n_heads=4, kv_heads=2, head_dim=32, d_ff=256, vocab=128,
+        act="silu", max_seq=128, attn_chunk=32, dtype="float32",
+        sparsity=SparsityConfig(density=0.25, block=32, where="ffn"),
+        engine="jnp")
+
+
+def _trace(fast: bool):
+    n_req = 12 if fast else 32
+    long_new, short_new = (24, 4) if fast else (48, 8)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(n_req):
+        plen = int(rng.integers(8, 25))
+        new = long_new if i % LONG_EVERY == 0 else short_new
+        reqs.append((i, rng.integers(1, 128, size=plen).astype(np.int32),
+                     new))
+    return reqs
+
+
+def _run_static(eng, reqs):
+    """FIFO groups of SLOTS; returns per-request completion latencies."""
+    lat = []
+    t0 = time.perf_counter()
+    for g in range(0, len(reqs), SLOTS):
+        grp = reqs[g:g + SLOTS]
+        S = max(len(p) for _, p, _ in grp)
+        new = max(n for _, _, n in grp)
+        prompts = np.zeros((len(grp), S), np.int32)
+        for j, (_, p, _) in enumerate(grp):
+            prompts[j, S - len(p):] = p        # right-aligned
+        eng.scfg.max_new_tokens = new
+        eng.generate(prompts)
+        done = time.perf_counter() - t0
+        lat.extend([done] * len(grp))          # whole group lands together
+    return time.perf_counter() - t0, lat
+
+
+def bench(fast=True):
+    import dataclasses
+
+    import jax
+
+    from repro.models import model as M
+    from repro.serve.engine import (ContinuousEngine, Engine, Request,
+                                    ServeConfig)
+
+    cfg = _cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    reqs = _trace(fast)
+    useful = sum(n for _, _, n in reqs)
+    n_long = sum(1 for i, _, _ in reqs if i % LONG_EVERY == 0)
+
+    # ---- static: FIFO groups, padded to group max, group-max max_new
+    eng = Engine(cfg, params, ServeConfig(eos_token=-1))
+    _run_static(eng, reqs)                     # warmup pass (compiles)
+    dt_s, lat_s = _run_static(eng, reqs)
+
+    # ---- continuous: same trace, all arrivals at tick 0
+    scfg = ServeConfig(eos_token=-1, slots=SLOTS, page_size=16,
+                       prefill_chunk=32, max_seq=max(len(p) + n
+                                                     for _, p, n in reqs))
+    ce = ContinuousEngine(cfg, params, scfg)
+    requests = [Request(rid=i, prompt=p, max_new_tokens=n)
+                for i, p, n in reqs]
+    ce.serve(list(requests))                   # warmup pass (compiles)
+    t0 = time.perf_counter()
+    ce.serve(list(requests))
+    dt_c = time.perf_counter() - t0
+    lat_c = [v["wall_s"] for v in ce.stats["latency"].values()]
+
+    def row(name, dt, lat, extra):
+        return {
+            "name": name,
+            "us_per_call": dt / useful * 1e6,
+            "derived": f"{len(reqs)} reqs ({n_long} long) {useful} tokens "
+                       f"slots={SLOTS} p50_lat={np.percentile(lat, 50) * 1e3:.0f}ms "
+                       f"p99_lat={np.percentile(lat, 99) * 1e3:.0f}ms {extra}",
+        }
+
+    st = ce.stats
+    return [
+        row("bench.serve.static", dt_s, lat_s,
+            f"{len(reqs) // SLOTS} FIFO groups padded to group max"),
+        row("bench.serve.continuous", dt_c, lat_c,
+            f"ticks={st['decode_ticks']} chunks={st['prefill_chunks']} "
+            f"peak_pages={st['peak_pages']}/{st['num_pages']} "
+            f"traces={st['decode_traces']}/{st['prefill_traces']}"),
+    ]

@@ -1,17 +1,34 @@
 """Pallas flash attention (beyond-paper) — the TPU drop-in for
-models/attention.chunked_attention.
+models/attention.chunked_attention, plus the paged single-query decode
+kernel the continuous-batching serve engine ticks through.
 
-Online-softmax attention with the (m, l, acc) running state in VMEM
-scratch: grid (B*H, Sq/bq, Sk/bk), KV blocks innermost so one q-tile's
-state never leaves VMEM; scores/probability tiles [bq, bk] are never
-written to HBM (the lax.scan version materializes them per chunk — the
-same stage-materialization cost structure the selective-scan kernel
-removes for SSMs).  GQA: the kv head for grid row h is h // rep via the
-BlockSpec index maps — no repeated K/V in memory.
+``flash_attention`` — online-softmax attention with the (m, l, acc)
+running state in VMEM scratch: grid (B*H, Sq/bq, Sk/bk), KV blocks
+innermost so one q-tile's state never leaves VMEM; scores/probability
+tiles [bq, bk] are never written to HBM (the lax.scan version
+materializes them per chunk — the same stage-materialization cost
+structure the selective-scan kernel removes for SSMs).  GQA: the kv head
+for grid row h is h // rep via the BlockSpec index maps — no repeated
+K/V in memory.  Ragged Sq/Sk are padded to the tile internally (padded
+query rows are sliced off, padded KV rows masked by an explicit
+kpos < Sk term), mirroring the fxp_qmatmul pad-to-tile contract.
+
+``flash_decode`` — the serve-path variant: one query per slot against a
+block-paged KV pool.  The per-slot page table and sequence lengths ride
+scalar prefetch exactly like the junction kernels' pattern indices; the
+KV pool stays in HBM (memory_space=ANY) and each page is gathered
+HBM→VMEM with the same double-buffered ``make_async_copy`` idiom as the
+reverse-weight DMA in block_sparse_matmul.dx — while page j is reduced
+into the online-softmax state, page j+1 is in flight.  Pages past a
+slot's length are skipped entirely (matching-predicate start/wait), so
+a ragged batch does no DMA for dead tail pages; a zero-length slot
+(free/prefilling — the engine points it at the scratch page) produces
+exact zeros.  Fixed shapes throughout: slot refill and page-table swaps
+change only the prefetched integers, never the traced graph.
 
 Causal masking from absolute block offsets; fully-masked tiles contribute
-exp(-inf)=0 naturally.  Validated against a naive oracle over
-(heads, GQA ratio, seq, window) sweeps in interpret mode.
+exp(-inf)=0 naturally.  Validated against naive oracles over
+(heads, GQA ratio, seq, window, ragged lengths) sweeps in interpret mode.
 """
 from __future__ import annotations
 
@@ -25,7 +42,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(nk: int, scale: float, causal: bool, window: int,
+def _kernel(nk: int, scale: float, causal: bool, window: int, kv_len: int,
             q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s):
     kb = pl.program_id(2)
 
@@ -43,7 +60,9 @@ def _kernel(nk: int, scale: float, causal: bool, window: int,
     bq, bk = s.shape
     qpos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
     kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    # ragged Sk: tile-padded key rows carry garbage — mask them for every
+    # mode (the causal term only covers them when qpos < kpos)
+    mask = kpos < kv_len
     if causal:
         mask = mask & (qpos >= kpos)
     if window:
@@ -64,22 +83,37 @@ def _kernel(nk: int, scale: float, causal: bool, window: int,
                     ).astype(o_ref.dtype)
 
 
+def _pad_dim(x, axis, to):
+    if x.shape[axis] == to:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, to - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     bq: int = 128, bk: int = 128,
                     interpret: bool = False):
     """q [BH, Sq, D]; k, v [BHkv, Sk, D] with BH % BHkv == 0 (GQA).
-    Returns [BH, Sq, D]."""
+    Returns [BH, Sq, D].  Ragged Sq/Sk are padded to the tile internally:
+    padded query rows are computed and sliced off, padded key rows are
+    masked inside the kernel (kpos < Sk), so callers never need
+    tile-multiple sequence lengths."""
     BH, Sq, D = q.shape
     BHkv, Sk, _ = k.shape
     assert BH % BHkv == 0
     rep = BH // BHkv
     bq = min(bq, Sq)
     bk = min(bk, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0
-    grid = (BH, Sq // bq, Sk // bk)
+    sq_p = pl.cdiv(Sq, bq) * bq
+    sk_p = pl.cdiv(Sk, bk) * bk
+    q = _pad_dim(q, 1, sq_p)
+    k = _pad_dim(k, 1, sk_p)
+    v = _pad_dim(v, 1, sk_p)
+    grid = (BH, sq_p // bq, sk_p // bk)
     scale = float(1.0 / (D ** 0.5))
-    return pl.pallas_call(
-        functools.partial(_kernel, Sk // bk, scale, causal, window),
+    out = pl.pallas_call(
+        functools.partial(_kernel, sk_p // bk, scale, causal, window, Sk),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
@@ -87,7 +121,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, bk, D), lambda h, i, j: (h // rep, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((BH, sq_p, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),       # running max
             pltpu.VMEM((bq,), jnp.float32),       # running denominator
@@ -95,6 +129,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :Sq] if sq_p != Sq else out
 
 
 def mha(q, k, v, *, causal: bool = True, window: int = 0,
@@ -108,3 +143,132 @@ def mha(q, k, v, *, causal: bool = True, window: int = 0,
     o = flash_attention(qf, kf, vf, causal=causal, window=window,
                         interpret=interpret, **kw)
     return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+# ===================================================== paged decode kernel
+def _decode_kernel(maxp: int, ps: int, hkv: int, scale: float,
+                   pt_ref, len_ref, q_ref, k_hbm, v_hbm, o_ref,
+                   kbuf, vbuf, sems, m_s, l_s, acc_s):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n = len_ref[b]
+
+    def start(buf, page):
+        pid = pt_ref[b, page]
+        pltpu.make_async_copy(k_hbm.at[pid], kbuf.at[buf], sems.at[buf, 0]).start()
+        pltpu.make_async_copy(v_hbm.at[pid], vbuf.at[buf], sems.at[buf, 1]).start()
+
+    def wait(buf, page):
+        pid = pt_ref[b, page]
+        pltpu.make_async_copy(k_hbm.at[pid], kbuf.at[buf], sems.at[buf, 0]).wait()
+        pltpu.make_async_copy(v_hbm.at[pid], vbuf.at[buf], sems.at[buf, 1]).wait()
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+        pl.when(n > 0)(lambda: start(0, 0))
+
+    # prefetch page j+1 while page j is reduced; predicate matches the
+    # wait below so skipped tail pages never touch the semaphores
+    @pl.when(jnp.logical_and(j + 1 < maxp, (j + 1) * ps < n))
+    def _next():
+        start((j + 1) % 2, j + 1)
+
+    @pl.when(j * ps < n)
+    def _compute():
+        wait(j % 2, j)
+        q = q_ref[0].astype(jnp.float32)              # [Hkv, rep, D]
+        kp = kbuf[j % 2].astype(jnp.float32)          # [ps, Hkv, D]
+        vp = vbuf[j % 2].astype(jnp.float32)
+        rep = q.shape[1]
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (rep, ps), 1)
+        valid = kpos < n
+        for h in range(hkv):
+            s = jax.lax.dot_general(q[h], kp[:, h],
+                                    (((1,), (1,)), ((), ()))) * scale  # [rep, ps]
+            s = jnp.where(valid, s, NEG_INF)
+            m_prev, l_prev, acc_prev = m_s[h], l_s[h], acc_s[h]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            m_s[h] = m_new
+            l_s[h] = l_prev * corr + jnp.sum(p, axis=1)
+            acc_s[h] = acc_prev * corr[:, None] + jax.lax.dot(p, vp[:, h])
+
+    @pl.when(j == maxp - 1)
+    def _finish():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_pool, v_pool, page_table, seq_lens, *,
+                 interpret: bool | None = None):
+    """Single-query decode attention over a block-paged KV pool.
+
+    q [B, Hkv, rep, D] — one query token per slot, grouped by kv head;
+    k_pool / v_pool [P, ps, Hkv, D] — the page pool (one layer's slice);
+    page_table [B, maxp] int32 — pool page ids per slot, in token order
+    (entry t covers positions [t*ps, (t+1)*ps));
+    seq_lens [B] int32 — valid tokens per slot (0 for free slots).
+
+    Returns [B, Hkv, rep, D].  The page table and lengths ride scalar
+    prefetch; pages are DMA'd HBM→VMEM double-buffered, with tail pages
+    past a slot's length skipped.  seq_lens == 0 yields exact zeros.
+    """
+    B, Hkv, rep, D = q.shape
+    P, ps, hkv2, _ = k_pool.shape
+    assert hkv2 == Hkv
+    maxp = page_table.shape[1]
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._auto_interpret()
+    scale = float(1.0 / (D ** 0.5))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, maxp, ps, Hkv, scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, maxp),
+            in_specs=[
+                pl.BlockSpec((1, Hkv, rep, D), lambda b, j, *_: (b, 0, 0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec((1, Hkv, rep, D), lambda b, j, *_: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((2, ps, Hkv, D), k_pool.dtype),   # k page buffers
+                pltpu.VMEM((2, ps, Hkv, D), v_pool.dtype),   # v page buffers
+                pltpu.SemaphoreType.DMA((2, 2)),
+                pltpu.VMEM((Hkv, rep), jnp.float32),         # running max
+                pltpu.VMEM((Hkv, rep), jnp.float32),         # running denom
+                pltpu.VMEM((Hkv, rep, D), jnp.float32),      # weighted acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, D), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pool, v_pool)
+
+
+def paged_decode_ref(q, k_pool, v_pool, page_table, seq_lens):
+    """jnp oracle for flash_decode (also the serve engine's jnp path):
+    gather the slot's pages, monolithic masked softmax in fp32.  Same
+    shapes/contract as flash_decode."""
+    B, Hkv, rep, D = q.shape
+    ps = k_pool.shape[1]
+    maxp = page_table.shape[1]
+    kg = k_pool[page_table].reshape(B, maxp * ps, Hkv, D)
+    vg = v_pool[page_table].reshape(B, maxp * ps, Hkv, D)
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bgrd,bkgd->bgrk", q.astype(jnp.float32),
+                   kg.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(maxp * ps)[None, :] < seq_lens[:, None]     # [B, K]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p / jnp.maximum(l, 1e-30),
+                     vg.astype(jnp.float32))
+    out = jnp.where((seq_lens > 0)[:, None, None, None], out, 0.0)
+    return out.astype(q.dtype)

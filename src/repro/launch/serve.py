@@ -1,7 +1,15 @@
 """Batched serving driver.
 
+Static batch (one prefill, lockstep decode):
+
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduce \
         --requests 8 --prompt-len 32 --max-new 16
+
+Continuous batching (paged KV cache, admission loop, chunked prefill):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduce \
+        --continuous --slots 4 --page-size 16 --prefill-chunk 32 \
+        --requests 12 --prompt-len 32 --max-new 16 --arrival-every 2
 """
 from __future__ import annotations
 
@@ -24,6 +32,20 @@ def main():
     ap.add_argument("--quantize", default=None, choices=["int8"],
                     help="quantize sparse junction weights at load "
                          "(int8 codes + per-block scales)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine over the paged KV "
+                         "cache (admission loop + chunked prefill)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[continuous] decode batch width")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="[continuous] tokens per KV page")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="[continuous] KV pool budget (0: full residency)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="[continuous] prefill chunk width")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="[continuous] synthetic trace: one request every "
+                         "N scheduler ticks (0: all arrive at tick 0)")
     args = ap.parse_args()
 
     import numpy as np
@@ -32,7 +54,8 @@ def main():
     from repro.configs import registry
     from repro.core.sparsity import SparsityConfig
     from repro.models import model as M
-    from repro.serve.engine import Engine, ServeConfig
+    from repro.serve.engine import (ContinuousEngine, Engine, Request,
+                                    ServeConfig)
     from repro.train import checkpoint as ckpt_mod
 
     cfg = registry.get(args.arch)
@@ -68,10 +91,44 @@ def main():
            else "no sparse junctions to quantize" if args.quantize
            else "full precision")
     print(f"[serve] quantize={args.quantize or 'off'} datapath: {why}")
+    import time
+
+    if args.continuous:
+        ok, reason = M.paged_supported(cfg)
+        if not ok:
+            raise SystemExit(f"[serve] --continuous unsupported: {reason}")
+        if extra:
+            raise SystemExit("[serve] --continuous does not take encoder "
+                             "side inputs (vlm/audio)")
+        scfg = ServeConfig(
+            max_new_tokens=args.max_new, temperature=args.temperature,
+            quantize=quant, slots=args.slots, page_size=args.page_size,
+            num_pages=args.num_pages, prefill_chunk=args.prefill_chunk,
+            max_seq=min(cfg.max_seq, args.prompt_len + args.max_new))
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=args.max_new,
+                        arrival=i * args.arrival_every)
+                for i in range(args.requests)]
+        eng = ContinuousEngine(cfg, params, scfg)
+        t0 = time.perf_counter()
+        outs = eng.serve(reqs)
+        dt = time.perf_counter() - t0
+        st = eng.stats
+        n_tok = sum(len(v) for v in outs.values())
+        waits = [v["wall_s"] for v in st["latency"].values()]
+        print(f"[serve] continuous: {len(outs)}/{args.requests} requests, "
+              f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        print(f"[serve] decode_ticks={st['decode_ticks']} "
+              f"prefill_chunks={st['prefill_chunks']} "
+              f"peak_pages={st['peak_pages']}/{st['num_pages']} "
+              f"traces={st['decode_traces']}/{st['prefill_traces']} "
+              f"p50_lat={np.percentile(waits, 50) * 1e3:.1f}ms "
+              f"p99_lat={np.percentile(waits, 99) * 1e3:.1f}ms")
+        print("[serve] first sequence:", outs[0][:16].tolist())
+        return outs
+
     eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.max_new,
                                           temperature=args.temperature,
                                           quantize=quant))
-    import time
     t0 = time.perf_counter()
     out = eng.generate(prompts, extra)
     dt = time.perf_counter() - t0

@@ -210,6 +210,100 @@ def gqa_decode(p: Params, x, cfg: ArchConfig, cache: dict, pos,
     return out, new_cache
 
 
+# =============================================================== paged paths
+def paged_kv_update(cache: dict, k_new, v_new, positions, page_table,
+                    keys=("k", "v")):
+    """Scatter new KV rows into the block-paged pool.
+
+    cache: {"k": [P, ps, Hkv, hd], "v": ...} (one layer's pool slice);
+    k_new/v_new [B, S, Hkv, hd] — tokens to write; positions [B, S] —
+    their absolute positions; page_table [B, maxp] — pool page ids in
+    token order.  Token at position t lands in page page_table[b, t//ps]
+    at offset t % ps, so a slot refill is a page-table swap, never a
+    cache copy.  Free/prefilling slots are pointed at the reserved
+    scratch page by the engine, so their writes are harmless."""
+    ps = cache[keys[0]].shape[1]
+    pid = jnp.take_along_axis(page_table, positions // ps, axis=1)   # [B, S]
+    off = positions % ps
+    pid, off = pid.reshape(-1), off.reshape(-1)
+    out = dict(cache)
+    for key, new in zip(keys, (k_new, v_new)):
+        flat = new.reshape(-1, *new.shape[2:]).astype(cache[key].dtype)
+        out[key] = cache[key].at[pid, off].set(flat)
+    return out
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                           engine: str = "jnp"):
+    """q [B,1,H,D]; pools [P,ps,Hkv,D]; page_table [B,maxp];
+    seq_lens [B] (valid tokens per slot).  Routes through the Pallas
+    flash_decode kernel under engine="pallas" (page table on scalar
+    prefetch, per-page HBM→VMEM DMA) and the gather+masked-softmax
+    reference otherwise.  Returns [B,1,H,D]."""
+    from repro.kernels import flash_attention as fa
+    B, _, H, D = q.shape
+    Hkv = k_pool.shape[2]
+    rep = H // Hkv
+    qf = q.reshape(B, Hkv, rep, D)
+    if engine == "pallas":
+        out = fa.flash_decode(qf, k_pool, v_pool, page_table, seq_lens)
+    else:
+        out = fa.paged_decode_ref(qf, k_pool, v_pool, page_table, seq_lens)
+    return out.reshape(B, 1, H, D)
+
+
+def gqa_decode_paged(p: Params, x, cfg: ArchConfig, cache: dict, positions,
+                     page_table):
+    """Continuous-batching single-token decode over the paged pool.
+
+    x [B,1,d]; positions [B] — per-slot write position (the cache holds
+    ``positions[b]`` tokens before this call); page_table [B, maxp].
+    Returns (out, new_cache).  Unlike gqa_decode there is no scalar
+    step: every slot carries its own counter, so a mid-tick refill only
+    changes the prefetched integers."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = _split_heads(sl.apply(p["wq"], x, engine=cfg.engine), H, hd)
+    k_new = _split_heads(sl.apply(p["wk"], x, engine=cfg.engine), Hkv, hd)
+    v_new = _split_heads(sl.apply(p["wv"], x, engine=cfg.engine), Hkv, hd)
+    pos2d = positions[:, None]                                   # [B, 1]
+    q = rope(q, pos2d, cfg.rope_theta, cfg.partial_rotary)
+    k_new = rope(k_new, pos2d, cfg.rope_theta, cfg.partial_rotary)
+    new_cache = paged_kv_update(cache, k_new, v_new, pos2d, page_table)
+    out = paged_decode_attention(q, new_cache["k"], new_cache["v"],
+                                 page_table, positions + 1, engine=cfg.engine)
+    out = sl.apply(p["wo"], out.reshape(B, 1, H * hd), engine=cfg.engine)
+    return out, new_cache
+
+
+def gqa_prefill_paged(p: Params, x, cfg: ArchConfig, cache: dict, positions,
+                      page_table):
+    """Chunked-prefill attention for one slot: x [1,C,d] (a fixed-size
+    prompt chunk, possibly tail-padded), positions [C] absolute chunk
+    positions, page_table [1, maxp].  Writes the chunk's KV into the
+    slot's pages, then attends causally over the gathered pages (earlier
+    chunks included) via chunked_attention with the gathered index as
+    kv position — padded tail tokens land past the prompt and are
+    overwritten by decode before they are ever unmasked."""
+    B, C, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = _split_heads(sl.apply(p["wq"], x, engine=cfg.engine), H, hd)
+    k_new = _split_heads(sl.apply(p["wk"], x, engine=cfg.engine), Hkv, hd)
+    v_new = _split_heads(sl.apply(p["wv"], x, engine=cfg.engine), Hkv, hd)
+    q = rope(q, positions, cfg.rope_theta, cfg.partial_rotary)
+    k_new = rope(k_new, positions, cfg.rope_theta, cfg.partial_rotary)
+    new_cache = paged_kv_update(cache, k_new, v_new, positions[None, :],
+                                page_table)
+    ps = new_cache["k"].shape[1]
+    maxp = page_table.shape[1]
+    kg = new_cache["k"][page_table[0]].reshape(1, maxp * ps, Hkv, hd)
+    vg = new_cache["v"][page_table[0]].reshape(1, maxp * ps, Hkv, hd)
+    out = chunked_attention(q, kg, vg, causal=True, chunk=cfg.attn_chunk,
+                            q_pos=positions, kv_pos=jnp.arange(maxp * ps))
+    out = sl.apply(p["wo"], out.reshape(B, C, H * hd), engine=cfg.engine)
+    return out, new_cache
+
+
 # =============================================================== MLA paths
 def mla_forward(p: Params, x, cfg: ArchConfig, *, positions):
     """DeepSeek-V2 multi-head latent attention, expanded form (train/prefill).

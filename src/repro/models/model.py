@@ -403,6 +403,115 @@ def decode_step(cfg: ArchConfig, params: Params, cache, token, pos):
     return logits, new_cache
 
 
+# ============================================================= paged decode
+def paged_supported(cfg: ArchConfig) -> tuple[bool, str]:
+    """(ok, reason) — whether the continuous-batching paged-KV decode
+    path can serve this config.  Families whose cache carries same-shape
+    state leaves (ssm/hybrid conv+ssm state, audio cross-attn KV) and
+    the non-GQA cache layouts (MLA latent, sliding ring buffer) stay on
+    the static step-locked engine."""
+    if cfg.family not in ("dense", "moe"):
+        return False, (f"family {cfg.family!r} carries non-seq cache state "
+                       "(see cache_seq_axes) — static engine only")
+    if cfg.attn_kind != "full":
+        return False, (f"attn_kind {cfg.attn_kind!r} — paged decode covers "
+                       "the full-attention GQA cache layout")
+    if cfg.family == "moe" and cfg.moe.first_dense_layers:
+        return False, "moe first_dense_layers splits the cache tree"
+    return True, "paged"
+
+
+def make_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int):
+    """Zeroed block-paged KV pool: every seq-axis cache leaf (per
+    ``cache_seq_axes``) [L, B, S, ...] becomes a pool [L, P, ps, ...] —
+    memory scales with the page budget (tokens-in-flight), not
+    batch x max_len.  Slot state (page tables, lengths) lives outside
+    the tree, in the serve engine."""
+    ok, why = paged_supported(cfg)
+    if not ok:
+        raise ValueError(f"paged cache unsupported: {why}")
+    axes = cache_seq_axes(cfg)
+    template = make_cache(cfg, 1, 1)
+
+    def mk(ax, t):
+        assert ax == 2, (ax, t.shape)
+        return jnp.zeros((t.shape[0], num_pages, page_size) + t.shape[3:],
+                         t.dtype)
+
+    return jax.tree.map(mk, axes, template)
+
+
+def _attn_block_paged(lp, x, cfg: ArchConfig, cache_i, positions, page_table,
+                      *, decode: bool):
+    """Paged twin of _attn_mlp_block: attention through the paged pool
+    slice, FFN/MoE unchanged.  Returns (x, new_cache_i, aux)."""
+    h = norm_apply(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+    if decode:
+        a, new_cache = attn.gqa_decode_paged(lp["attn"], h, cfg, cache_i,
+                                             positions, page_table)
+    else:
+        a, new_cache = attn.gqa_prefill_paged(lp["attn"], h, cfg, cache_i,
+                                              positions, page_table)
+    x = x + a
+    h = norm_apply(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+    if "moe" in lp:
+        m, aux = moe_mod.moe_apply(lp["moe"], h, cfg)
+    else:
+        m, aux = mlp_apply(lp["mlp"], h, cfg), 0.0
+    return x + m, new_cache, aux
+
+
+def paged_decode_step(cfg: ArchConfig, params: Params, pool, token, positions,
+                      page_table):
+    """One continuous-batching decode tick: token [B,1] int32, positions
+    [B] int32 (per-slot write position — the scalar ``S + i`` of the
+    step-locked path replaced by per-slot counters), page_table
+    [B, maxp] int32.  Returns (logits [B,1,V], new_pool).  All shapes
+    are fixed: slot refills and page-table swaps change data only, so
+    the tick compiles exactly once."""
+    ok, why = paged_supported(cfg)
+    if not ok:
+        raise ValueError(f"paged decode unsupported: {why}")
+    x = embed_tokens(params["embed"], token, cfg)
+
+    def fn(x, lp, ci):
+        return _attn_block_paged(lp, x, cfg, ci, positions, page_table,
+                                 decode=True)
+
+    x, pool = _scan_layers_inplace_cache(fn, x, params["layers"], cfg, pool)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, pool
+
+
+def paged_prefill_chunk(cfg: ArchConfig, params: Params, pool, tokens, base,
+                        page_table_row, chunk_len):
+    """Prefill one fixed-size chunk of ONE slot's prompt into the paged
+    pool: tokens [1, C] (tail-padded past ``chunk_len``), base scalar
+    int32 (absolute position of tokens[0]), page_table_row [maxp].
+    Returns (last_logits [1,1,V], new_pool) where last_logits is taken
+    at the chunk's final valid position — the seed logits once the last
+    chunk lands.  Fixed [1, C] shape: a long prompt becomes several
+    chunk calls interleaved with decode ticks instead of one batch-wide
+    stall."""
+    ok, why = paged_supported(cfg)
+    if not ok:
+        raise ValueError(f"paged prefill unsupported: {why}")
+    C = tokens.shape[1]
+    x = embed_tokens(params["embed"], tokens, cfg)
+    positions = base + jnp.arange(C)
+    pt = page_table_row[None, :]
+
+    def fn(x, lp, ci):
+        return _attn_block_paged(lp, x, cfg, ci, positions, pt, decode=False)
+
+    x, pool = _scan_layers_inplace_cache(fn, x, params["layers"], cfg, pool)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
+    logits = unembed(params["embed"], last, cfg)
+    return logits, pool
+
+
 # ============================================================= cache specs
 def make_cache(cfg: ArchConfig, batch: int, seq: int):
     """Zeroed cache pytree for decode (dry-run ShapeDtypeStruct source)."""

@@ -1,15 +1,47 @@
-"""Batched serving engine: continuous batched decode over a shared cache.
+"""Serving engines: static step-locked batch decode and the
+continuous-batching engine over a block-paged KV cache.
 
-Requests arrive with prompts; the engine prefills them as a batch, then
-decodes step-locked (one ``decode_step`` per tick for the whole batch),
-sampling greedily or by temperature.  Slot management is static-batch
-(the dry-run shapes fix the batch); a finished sequence's slot keeps
-decoding into a scratch position and is masked out — the standard
-fixed-shape TPU serving pattern (shape stability = no recompiles).
+Two engines share the ServeConfig surface:
+
+``Engine`` — the static-batch baseline: one prefill, then every slot
+decodes in lockstep until the longest request finishes, with finished
+slots burning compute into a masked scratch position.  Fixed shapes, no
+recompiles — the right kernel pattern but the wrong scheduler for heavy
+traffic (a batch is as slow as its longest member).
+
+``ContinuousEngine`` — the production scheduler (PR 9).  Requests carry
+their own prompt/max_new/arrival; an admission loop refills finished
+slots from the queue mid-flight (the per-slot liveness masks from the
+guard/EOS machinery become the free-slot signal), long prompts prefill
+in fixed-size chunks interleaved with decode ticks, and the KV cache is
+a block-paged pool (models/model.make_paged_cache) where a slot refill
+is a page-table swap, never a cache copy.  Scheduler invariants:
+
+* every jitted step has ONE shape: the decode tick is always
+  (token [B,1], positions [B], page_table [B,maxp]) and the prefill
+  chunk always [1, C] — admission, refill, and completion change only
+  the integers riding scalar prefetch, so each step compiles exactly
+  once (``decode_traces`` / ``prefill_traces`` count retraces);
+* page accounting is all-or-nothing at admission (serve/paged.PagePool):
+  a request is admitted only when its whole worst-case page span is
+  free, so no mid-flight exhaustion and no preemption;
+* pool page 0 is the scratch page — free and still-prefilling slots are
+  pointed at it during a decode tick, so their masked garbage writes
+  never touch live pages;
+* decode attends through kernels/flash_attention.flash_decode under
+  engine="pallas" (page table on scalar prefetch, double-buffered
+  per-page HBM→VMEM DMA — the junction engine's prefetch+DMA idiom
+  applied to attention) and the gather+masked-softmax reference on jnp.
+
+Sampling is greedy or by temperature (one fold_in subkey per tick); a
+slot whose logits go non-finite is terminated and counted
+(``nonfinite_terminated``), like the static engine's guard.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -18,7 +50,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.serve.paged import PagePool
+from repro.train.steps import (make_decode_step, make_paged_prefill_step,
+                               make_prefill_step)
 
 
 @dataclasses.dataclass
@@ -46,6 +80,24 @@ class ServeConfig:
     # batch (categorical over NaN logits returns arbitrary token ids and
     # argmax propagates index 0 silently).  Other slots are untouched.
     guard_nonfinite: bool = True
+    # ---- continuous-batching knobs (ContinuousEngine only) ----
+    slots: int = 4          # decode batch width (fixed tick shape)
+    page_size: int = 16     # tokens per KV page
+    num_pages: int = 0      # pool budget; 0: full residency
+                            # (slots * ceil(max_seq/page_size) + scratch)
+    prefill_chunk: int = 32 # chunked-prefill width (fixed [1, C] shape)
+    max_seq: int = 0        # per-request prompt+new cap; 0: cfg.max_seq
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request.  ``arrival`` is in scheduler ticks (one tick
+    per scheduler iteration): the request becomes admissible once the
+    engine's tick counter reaches it."""
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int
+    arrival: int = 0
 
 
 class Engine:
@@ -87,6 +139,9 @@ class Engine:
     def generate(self, prompts: np.ndarray, extra_inputs: dict | None = None):
         """prompts [B, S_prompt] int32 (right-aligned, padded with 0).
         Returns tokens [B, max_new_tokens]."""
+        # refreshed-per-call contract: reset BEFORE the guard branch so a
+        # guard-off engine never serves a stale count from a prior call
+        self.nonfinite_terminated = 0
         B, S = prompts.shape
         total = S + self.scfg.max_new_tokens
         batch = {"tokens": jnp.asarray(prompts)}
@@ -155,3 +210,248 @@ class Engine:
             return jax.lax.dynamic_update_slice_in_dim(dst, src, 0, ax)
 
         return jax.tree.map(place, axes, full, cache)
+
+
+# =============================================================== continuous
+_FREE, _PREFILL, _DECODE = 0, 1, 2
+
+
+class _Slot:
+    __slots__ = ("state", "req", "pages", "cache_len", "prefill_pos", "out",
+                 "last_tok", "t_admit", "t_wall")
+
+    def __init__(self):
+        self.state = _FREE
+        self.req: Request | None = None
+        self.pages: list[int] = []
+        self.cache_len = 0        # tokens written to the paged cache
+        self.prefill_pos = 0      # prompt tokens prefilled so far
+        self.out: list[int] = []
+        self.last_tok = 0         # sampled, not yet fed through decode
+        self.t_admit = 0
+        self.t_wall = 0.0
+
+
+class ContinuousEngine:
+    """Continuous-batching serve engine over the block-paged KV cache.
+
+    ``serve(requests)`` drives the admission/prefill/decode loop until
+    every request completes; returns {rid: np.ndarray of generated
+    tokens} (variable length: a slot frees the moment its request hits
+    EOS or its own max_new — that freed capacity is the throughput win
+    over the static engine).  ``stats`` carries per-request latencies
+    and the page accounting afterwards."""
+
+    def __init__(self, cfg: ArchConfig, params,
+                 serve_cfg: ServeConfig | None = None):
+        self.scfg = serve_cfg or ServeConfig()
+        if self.scfg.engine is not None:
+            cfg = dataclasses.replace(cfg, engine=self.scfg.engine)
+        ok, why = M.paged_supported(cfg)
+        if not ok:
+            raise ValueError(f"ContinuousEngine: {why}")
+        if self.scfg.quantize:
+            if self.scfg.quantize != "int8":
+                raise ValueError("ContinuousEngine supports quantize='int8' "
+                                 "only (same contract as Engine)")
+            from repro.core import quantize as qz
+            params = qz.quantize_tree(params, qz.QuantConfig(mode="int8"))
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = self.scfg.max_seq or cfg.max_seq
+        ps = self.scfg.page_size
+        self.pages_per_slot = -(-self.max_seq // ps)
+        # retrace counters: the fixed-shape contract says each stays 1
+        # across an entire serve() run (asserted by tests and CI)
+        self.decode_traces = 0
+        self.prefill_traces = 0
+        self.nonfinite_terminated = 0
+        self.stats: dict = {}
+
+        decode_fn = make_decode_step(cfg, paged=True)
+        prefill_fn = make_paged_prefill_step(cfg)
+        greedy = self.scfg.temperature <= 0.0
+        temp = self.scfg.temperature
+
+        def tick(params, pool, token, positions, page_table, key):
+            self.decode_traces += 1     # traced-time side effect
+            logits, pool = decode_fn(params, pool, token, positions,
+                                     page_table)
+            lg = logits[:, -1].astype(jnp.float32)
+            bad = jnp.any(~jnp.isfinite(lg), axis=-1)
+            lg = jnp.where(bad[:, None], jnp.zeros_like(lg), lg)
+            if greedy:
+                tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                tok = jax.random.categorical(key, lg / temp,
+                                             axis=-1).astype(jnp.int32)
+            return tok, bad, pool
+
+        def prefill_chunk(params, pool, tokens, base, ptrow, chunk_len):
+            self.prefill_traces += 1    # traced-time side effect
+            logits, pool = prefill_fn(params, pool, tokens, base, ptrow,
+                                      chunk_len)
+            return logits[:, -1].astype(jnp.float32), pool
+
+        self._tick = jax.jit(tick, donate_argnums=(1,))
+        self._prefill_chunk = jax.jit(prefill_chunk, donate_argnums=(1,))
+
+    # ---------------------------------------------------------- sampling
+    def _sample_host(self, logits_row: np.ndarray, key) -> int:
+        if self.scfg.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        draw = jax.random.categorical(
+            key, jnp.asarray(logits_row) / self.scfg.temperature, axis=-1)
+        return int(draw)
+
+    # ---------------------------------------------------------- scheduler
+    def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
+        scfg = self.scfg
+        B, ps = scfg.slots, scfg.page_size
+        maxp = self.pages_per_slot
+        num_pages = scfg.num_pages or (B * maxp + 1)
+        for r in requests:
+            need = len(r.prompt) + r.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request {r.rid}: prompt+max_new = {need} exceeds "
+                    f"max_seq {self.max_seq}")
+            if -(-need // ps) > num_pages - 1:
+                raise ValueError(
+                    f"request {r.rid} needs more pages than the pool holds")
+        pool_acct = PagePool(num_pages, ps)
+        pool = M.make_paged_cache(self.cfg, num_pages, ps)
+        slots = [_Slot() for _ in range(B)]
+        # FIFO within arrival order (stable sort keeps submission order)
+        queue = collections.deque(sorted(requests, key=lambda r: r.arrival))
+        root = jax.random.PRNGKey(scfg.seed)
+        self.nonfinite_terminated = 0
+        eos = scfg.eos_token
+        guard = scfg.guard_nonfinite
+        outputs: dict[int, np.ndarray] = {}
+        lat: dict[int, dict] = {}
+        tick = 0
+        decode_ticks = prefill_chunks = 0
+        pf_cursor = 0               # round-robin over prefilling slots
+        t_serve0 = time.perf_counter()
+
+        def finish(s: _Slot):
+            r = s.req
+            outputs[r.rid] = np.asarray(s.out, np.int32)
+            lat[r.rid] = {"arrival": r.arrival, "admitted": s.t_admit,
+                          "finished": tick,
+                          "wall_s": time.perf_counter() - s.t_wall}
+            pool_acct.release(s.pages)
+            s.__init__()            # back to FREE
+
+        def step_done(s: _Slot, tok: int) -> bool:
+            """Record one sampled token; True when the request completed."""
+            s.out.append(tok)
+            s.last_tok = tok
+            if eos >= 0 and tok == eos:
+                return True
+            return len(s.out) >= s.req.max_new_tokens
+
+        while queue or any(s.state != _FREE for s in slots):
+            # ---- admission: refill free slots from the arrival queue
+            for s in slots:
+                if s.state != _FREE or not queue:
+                    continue
+                if queue[0].arrival > tick:
+                    break
+                need = pool_acct.pages_for(
+                    len(queue[0].prompt) + queue[0].max_new_tokens)
+                pages = pool_acct.alloc(need)
+                if pages is None:
+                    break           # pool full: stays queued, retry next tick
+                r = queue.popleft()
+                s.state = _PREFILL
+                s.req = r
+                s.pages = pages
+                s.cache_len = 0
+                s.prefill_pos = 0
+                s.out = []
+                s.t_admit = tick
+                s.t_wall = time.perf_counter()
+
+            # ---- one prefill chunk (round-robin), interleaved with decode
+            pf_slots = [i for i, s in enumerate(slots) if s.state == _PREFILL]
+            if pf_slots:
+                i = pf_slots[pf_cursor % len(pf_slots)]
+                pf_cursor += 1
+                s = slots[i]
+                prompt = s.req.prompt
+                C = scfg.prefill_chunk
+                cl = min(C, len(prompt) - s.prefill_pos)
+                buf = np.zeros((1, C), np.int32)
+                buf[0, :cl] = prompt[s.prefill_pos:s.prefill_pos + cl]
+                ptrow = self._page_row(s, maxp)
+                last_logits, pool = self._prefill_chunk(
+                    self.params, pool, jnp.asarray(buf),
+                    jnp.asarray(s.prefill_pos, jnp.int32),
+                    jnp.asarray(ptrow), jnp.asarray(cl, jnp.int32))
+                prefill_chunks += 1
+                s.prefill_pos += cl
+                s.cache_len = s.prefill_pos
+                if s.prefill_pos == len(prompt):
+                    row = np.asarray(last_logits)[0]
+                    bad = not np.all(np.isfinite(row))
+                    if guard and bad:
+                        self.nonfinite_terminated += 1
+                        s.out.append(eos if eos >= 0 else 0)
+                        finish(s)
+                    else:
+                        key = jax.random.fold_in(root, 2 * tick)
+                        if step_done(s, self._sample_host(row, key)):
+                            finish(s)
+                        else:
+                            s.state = _DECODE
+
+            # ---- decode tick: ONE fixed-shape call for the whole batch
+            dec = [i for i, s in enumerate(slots) if s.state == _DECODE]
+            if dec:
+                tokens = np.zeros((B, 1), np.int32)
+                positions = np.zeros((B,), np.int32)
+                pt = np.zeros((B, maxp), np.int32)   # scratch page default
+                for i in dec:
+                    s = slots[i]
+                    tokens[i, 0] = s.last_tok
+                    positions[i] = s.cache_len
+                    pt[i] = self._page_row(s, maxp)
+                key = jax.random.fold_in(root, 2 * tick + 1)
+                tok, bad, pool = self._tick(
+                    self.params, pool, jnp.asarray(tokens),
+                    jnp.asarray(positions), jnp.asarray(pt), key)
+                decode_ticks += 1
+                tok, bad = np.asarray(tok), np.asarray(bad)
+                for i in dec:
+                    s = slots[i]
+                    s.cache_len += 1
+                    if guard and bad[i]:
+                        self.nonfinite_terminated += 1
+                        s.out.append(eos if eos >= 0 else 0)
+                        finish(s)
+                    elif step_done(s, int(tok[i])):
+                        finish(s)
+            elif not pf_slots and queue:
+                # idle: jump the clock to the next arrival
+                tick = max(tick, queue[0].arrival - 1)
+            tick += 1
+
+        self.stats = {
+            "ticks": tick, "decode_ticks": decode_ticks,
+            "prefill_chunks": prefill_chunks,
+            "peak_pages": pool_acct.peak_in_use,
+            "num_pages": num_pages, "page_size": ps,
+            "wall_s": time.perf_counter() - t_serve0,
+            "latency": lat,
+            "decode_traces": self.decode_traces,
+            "prefill_traces": self.prefill_traces,
+        }
+        return outputs
+
+    @staticmethod
+    def _page_row(s: _Slot, maxp: int) -> np.ndarray:
+        row = np.zeros((maxp,), np.int32)       # sentinel: scratch page 0
+        row[:len(s.pages)] = s.pages
+        return row

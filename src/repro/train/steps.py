@@ -267,12 +267,36 @@ def make_prefill_step(cfg: ArchConfig):
     return prefill
 
 
-def make_decode_step(cfg: ArchConfig):
+def make_decode_step(cfg: ArchConfig, *, paged: bool = False):
+    """Decode tick builder.  The default (static) step carries the
+    step-locked scalar position; ``paged=True`` returns the
+    continuous-batching tick, where per-slot position counters and the
+    page table replace the scalar ``S + i`` argument:
+    decode(params, pool, token [B,1], positions [B], page_table [B,maxp])
+    -> (logits [B,1,V], pool)."""
     cfg = _resolve_engine(cfg)
+
+    if paged:
+        def decode_paged(params, pool, token, positions, page_table):
+            return M.paged_decode_step(cfg, params, pool, token, positions,
+                                       page_table)
+        return decode_paged
 
     def decode(params, cache, token, pos):
         return M.decode_step(cfg, params, cache, token, pos)
     return decode
+
+
+def make_paged_prefill_step(cfg: ArchConfig):
+    """Chunked-prefill step for the continuous-batching engine:
+    prefill(params, pool, tokens [1,C], base, page_table_row [maxp],
+    chunk_len) -> (last_logits [1,1,V], pool)."""
+    cfg = _resolve_engine(cfg)
+
+    def prefill_chunk(params, pool, tokens, base, page_table_row, chunk_len):
+        return M.paged_prefill_chunk(cfg, params, pool, tokens, base,
+                                     page_table_row, chunk_len)
+    return prefill_chunk
 
 
 def make_eval_step(cfg: ArchConfig):

@@ -136,6 +136,66 @@ def test_flash_attention_kernel(H, Hkv, Sq, window):
                                atol=2e-4, rtol=2e-4)
 
 
+def _attn_oracle(q, k, v, causal, window):
+    rep = q.shape[2] // k.shape[2]
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / np.sqrt(q.shape[-1])
+    qp = jnp.arange(q.shape[1])[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(qp >= kp) if not causal else (qp >= kp)
+    if window:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vf)
+
+
+@pytest.mark.parametrize("Sq,Sk,causal,window", [
+    (37, 37, True, 0),    # off-tile square
+    (37, 53, False, 0),   # off-tile rectangular non-causal: the padded KV
+                          # rows are only excluded by the explicit
+                          # kv_len mask, not the causal one
+    (100, 100, True, 48), # off-tile windowed
+    (1, 64, False, 0),    # single query row
+])
+def test_flash_attention_ragged_shapes(Sq, Sk, causal, window):
+    """flash_attention pads ragged Sq/Sk to the tile internally (used to
+    assert) and the pad rows/cols never leak into the output."""
+    from repro.kernels.flash_attention import mha
+    B, H, D = 2, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(Sq * Sk), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, H, D), jnp.float32)
+    got = mha(q, k, v, causal=causal, window=window,
+              interpret=True, bq=64, bk=64)
+    assert got.shape == q.shape
+    want = _attn_oracle(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("H,Hkv,window", [
+    (4, 4, 0), (8, 2, 0), (4, 2, 96),
+])
+def test_mha_matches_chunked_attention(H, Hkv, window):
+    """The Pallas kernel and the models/attention.chunked_attention
+    reference (the path the model actually serves through on jnp) agree
+    — causal, GQA and windowed variants."""
+    from repro.kernels.flash_attention import mha
+    from repro.models.attention import chunked_attention
+    B, S, D = 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(H * 7 + window), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    got = mha(q, k, v, causal=True, window=window, interpret=True,
+              bq=64, bk=64)
+    want = chunked_attention(q, k, v, causal=True, window=window, chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
 # ---------------------------------------------------- fused engine autodiff
 def _ragged_pattern(n_in, n_out, density, bs):
     """Pattern whose fan-out is ragged (+-1) — exercises the rev_cnt mask."""
