@@ -66,13 +66,14 @@ def main() -> None:
                          "--json filename)")
     args = ap.parse_args()
 
-    from benchmarks import (engine_benches, paper_benches, roofline_table,
-                            serve_benches)
+    from benchmarks import (engine_benches, obs_benches, paper_benches,
+                            roofline_table, serve_benches)
 
     benches = dict(paper_benches.BENCHES)
     benches["roofline"] = roofline_table.bench
     benches["engine"] = engine_benches.bench
     benches["serve"] = serve_benches.bench
+    benches["obs"] = obs_benches.bench
     only = [s for s in args.only.split(",") if s]
     unknown = sorted(set(only) - set(benches))
     if unknown:

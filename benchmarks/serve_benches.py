@@ -15,7 +15,9 @@ among short ones, more requests than decode slots — served two ways:
 ``us_per_call`` is microseconds per *useful* generated token (each
 request's own max_new — the tokens the client asked for, not the padded
 work the static engine burns), so the two rows are directly comparable;
-``derived`` carries the p50/p99 request latency.  Both engines run
+``derived`` carries the p50/p99 request latency (nearest-rank via the
+shared ``repro.obs.percentile`` — p99 of a <100-request trace is the
+worst OBSERVED latency, not an interpolation past it).  Both engines run
 engine="jnp" (portable timings; the Pallas decode kernel's interpret
 mode off-TPU is an emulator, not a measurement) and both are timed on a
 second full pass so compilation is excluded.
@@ -80,6 +82,7 @@ def bench(fast=True):
     import jax
 
     from repro.models import model as M
+    from repro.obs import percentile
     from repro.serve.engine import (ContinuousEngine, Engine, Request,
                                     ServeConfig)
 
@@ -112,8 +115,8 @@ def bench(fast=True):
             "name": name,
             "us_per_call": dt / useful * 1e6,
             "derived": f"{len(reqs)} reqs ({n_long} long) {useful} tokens "
-                       f"slots={SLOTS} p50_lat={np.percentile(lat, 50) * 1e3:.0f}ms "
-                       f"p99_lat={np.percentile(lat, 99) * 1e3:.0f}ms {extra}",
+                       f"slots={SLOTS} p50_lat={percentile(lat, 50) * 1e3:.0f}ms "
+                       f"p99_lat={percentile(lat, 99) * 1e3:.0f}ms {extra}",
         }
 
     st = ce.stats

@@ -135,11 +135,13 @@ echo "== serve smoke (continuous batching: arrival trace, compile-once) =="
 # and the fixed-shape contract must hold — the decode tick and prefill
 # chunk each trace exactly once across the whole run (slot refills and
 # page-table swaps change integers, never shapes)
-python - <<'PY'
+python - "OBS_${TAG}_serve.jsonl" <<'PY'
+import sys
 import jax, numpy as np
 from repro.configs import registry
 from repro.core.sparsity import SparsityConfig
 from repro.models import model as M
+from repro.obs import Recorder
 from repro.serve.engine import ContinuousEngine, Request, ServeConfig
 
 cfg = registry.get("stablelm-3b").reduced().with_sparsity(
@@ -149,9 +151,14 @@ rng = np.random.default_rng(0)
 reqs = [Request(rid=i, prompt=rng.integers(1, 64, size=6 + 3 * (i % 3))
                 .astype(np.int32), max_new_tokens=3 + (i % 4), arrival=i)
         for i in range(6)]
+# the flight recorder rides the whole trace — the compile-once assert
+# below also guards the recorder's no-retrace contract (ISSUE 10)
+rec = Recorder(sys.argv[1], meta={"launcher": "ci-serve-smoke"})
 eng = ContinuousEngine(cfg, params, ServeConfig(
-    eos_token=-1, slots=2, page_size=8, prefill_chunk=8, max_seq=32))
+    eos_token=-1, slots=2, page_size=8, prefill_chunk=8, max_seq=32),
+    recorder=rec)
 outs = eng.serve(reqs)
+rec.close()
 st = eng.stats
 if set(outs) != set(range(6)):
     raise SystemExit(f"[ci] serve smoke: incomplete requests {sorted(outs)}")
@@ -163,12 +170,41 @@ if st["decode_traces"] != 1 or st["prefill_traces"] != 1:
                      f"prefill={st['prefill_traces']} (fixed-shape contract broken)")
 print(f"[ci] serve smoke: 6/6 requests, decode_ticks={st['decode_ticks']} "
       f"prefill_chunks={st['prefill_chunks']} "
-      f"peak_pages={st['peak_pages']}/{st['num_pages']} traces=1/1")
+      f"peak_pages={st['peak_pages']}/{st['num_pages']} traces=1/1, "
+      f"telemetry -> {sys.argv[1]}")
 PY
 
-echo "== fast benches (engine incl. MoE + fused-update rows, sweep, serve, roofline) =="
-python -m benchmarks.run --only engine,roofline,serve --json "BENCH_${TAG}.json" \
-  --tag "$TAG"
+echo "== obs smoke (flight recorder: train telemetry + span reconstruction) =="
+# short telemetry-on train run, then obs_report renders the merged train +
+# serve timeline: exits nonzero unless every completed request in the
+# serve trace above reconstructs a full span (enqueue <= admit <= first
+# token <= finish) — the ISSUE 10 acceptance gate
+python -m repro.launch.train --reduce --steps 8 --batch 2 --seq 64 \
+  --ckpt "/tmp/obs_ci_ckpt_${TAG}" --ckpt-every 4 \
+  --obs "OBS_${TAG}_train.jsonl"
+python -m repro.launch.obs_report "OBS_${TAG}_train.jsonl" \
+  "OBS_${TAG}_serve.jsonl" --check-spans --tag "$TAG" \
+  --json "OBS_report_${TAG}.json"
+python - "OBS_report_${TAG}.json" <<'PY'
+import json, sys
+rep = json.load(open(sys.argv[1]))
+meta, report = rep["meta"], rep["report"]
+if not meta.get("git_sha") or "backend" not in meta:
+    sys.exit(f"[ci] obs report {sys.argv[1]} is missing the artifact stamp")
+if report.get("train", {}).get("steps") != 8:
+    sys.exit(f"[ci] obs report: expected 8 train steps, got "
+             f"{report.get('train', {}).get('steps')}")
+if report.get("serve", {}).get("requests") != 6:
+    sys.exit(f"[ci] obs report: expected 6 serve spans, got "
+             f"{report.get('serve', {}).get('requests')}")
+print(f"[ci] obs smoke: {report['n_events']} events -> train "
+      f"{report['train']['steps']} steps + {report['serve']['requests']} "
+      f"full spans (sha {meta['git_sha']})")
+PY
+
+echo "== fast benches (engine incl. MoE + fused-update rows, sweep, serve, roofline, obs) =="
+python -m benchmarks.run --only engine,roofline,serve,obs \
+  --json "BENCH_${TAG}.json" --tag "$TAG"
 
 python - "BENCH_${TAG}.json" benchmarks/BENCH_baseline.json "$FAIL_ON_REGRESS" <<'PY'
 import sys
@@ -195,6 +231,9 @@ THRESHOLDS = {
     # runs of this box against the per-row-MIN baseline)
     "bench.serve.static": 2.5,
     "bench.serve.continuous": 2.5,
+    # whole train-loop + serve-trace timing (recorder-on wall time);
+    # same host-dispatch noise class as the serve rows
+    "bench.obs.overhead": 2.5,
 }
 
 path, base_path, fail_on_regress = sys.argv[1], sys.argv[2], sys.argv[3] == "1"

@@ -85,6 +85,24 @@ class KernelSpec(NamedTuple):
     quant: str = "none"
 
 
+def _kernel_scope(name: str, spec: KernelSpec):
+    """Profiler attribution for the junction entry points: a
+    ``jax.named_scope`` keyed off the KernelSpec knobs (E / gated / act /
+    quant), so a ``jax.profiler`` trace (``--profile`` on the launchers)
+    shows e.g. ``junction_train_update_E16_gated`` instead of an
+    anonymous pallas_call.  Pure metadata on the jaxpr scope stack — adds
+    no ops and changes no jaxpr equations (regression-tested in
+    tests/test_obs.py)."""
+    tag = f"{name}_E{spec.E}"
+    if spec.gated:
+        tag += "_gated"
+    elif spec.act != "none":
+        tag += f"_{spec.act}"
+    if spec.quant != "none":
+        tag += f"_{spec.quant}"
+    return jax.named_scope(tag)
+
+
 def _fwd_call(spec, x, ws, b, idx, save: bool):
     """(y, res) through the forward kernels; res is the backward residual
     ((g, u) for gated, pre-activation or y for plain activations, None
@@ -266,7 +284,8 @@ def junction_matmul(x, w, idx, rev_ob, rev_t, rev_cnt, *, wi=None, bias=None,
           else (w5.astype(x.dtype),))
     spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
                       has_bias=bias is not None, interpret=interpret)
-    y = _junction_core(spec, x3, ws, b, idx, rev_ob, rev_t, rev_cnt)
+    with _kernel_scope("junction_matmul", spec):
+        y = _junction_core(spec, x3, ws, b, idx, rev_ob, rev_t, rev_cnt)
     y = y[:, :M]
     return y.reshape(*lead, nob * bs) if single else y
 
@@ -300,17 +319,18 @@ def _junction_quant(x, w, idx, *, wi, bias, act, interpret, bm, bn,
          else b2.astype(jnp.float32))
     xs = (None if x_scale is None
           else jnp.asarray(x_scale, jnp.float32).reshape(-1))
-    if spec.quant == "fxp":
-        y = bsm.fwd_fxp(x3, w5, idx, qfmt, qlut, b, bm=spec.bm, bn=spec.bn,
-                        interpret=spec.interpret)
-    elif spec.gated:
-        y = bsm.gated_fwd_int8(x3, w5, wi5, idx, lift(w_scale),
-                               lift(wi_scale), x_scale=xs, bm=spec.bm,
-                               bn=spec.bn, interpret=spec.interpret)
-    else:
-        y = bsm.fwd_int8(x3, w5, idx, lift(w_scale), b, act=spec.act,
-                         x_scale=xs, bm=spec.bm, bn=spec.bn,
-                         interpret=spec.interpret)
+    with _kernel_scope("junction_matmul", spec):
+        if spec.quant == "fxp":
+            y = bsm.fwd_fxp(x3, w5, idx, qfmt, qlut, b, bm=spec.bm,
+                            bn=spec.bn, interpret=spec.interpret)
+        elif spec.gated:
+            y = bsm.gated_fwd_int8(x3, w5, wi5, idx, lift(w_scale),
+                                   lift(wi_scale), x_scale=xs, bm=spec.bm,
+                                   bn=spec.bn, interpret=spec.interpret)
+        else:
+            y = bsm.fwd_int8(x3, w5, idx, lift(w_scale), b, act=spec.act,
+                             x_scale=xs, bm=spec.bm, bn=spec.bn,
+                             interpret=spec.interpret)
     y = y[:, :M]
     return y.reshape(*lead, nob * bs) if single else y
 
@@ -457,8 +477,10 @@ def junction_train_update(x, w, idx, rev_ob, rev_t, rev_cnt, *, hyp,
     spec = KernelSpec(E=E, gated=gated, act=act, bm=bm, bn=bn,
                       has_bias=bias is not None, interpret=interpret,
                       with_health=with_health)
-    y = _junction_update_core(spec, x3, ws, b, moms, mom_b_t, vels, vel_b_t,
-                              hyp, health, idx, rev_ob, rev_t, rev_cnt)
+    with _kernel_scope("junction_train_update", spec):
+        y = _junction_update_core(spec, x3, ws, b, moms, mom_b_t, vels,
+                                  vel_b_t, hyp, health, idx, rev_ob, rev_t,
+                                  rev_cnt)
     y = y[:, :M]
     return y.reshape(*lead, nob * bs) if single else y
 

@@ -46,6 +46,14 @@ def main():
     ap.add_argument("--arrival-every", type=int, default=0,
                     help="[continuous] synthetic trace: one request every "
                          "N scheduler ticks (0: all arrive at tick 0)")
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="flight-recorder JSONL sink: per-request spans + "
+                         "TTFT/ITL histograms + occupancy gauges "
+                         "(continuous engine); render with "
+                         "repro.launch.obs_report")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler trace written to "
+                         "DIR (kernels show up named by KernelSpec)")
     args = ap.parse_args()
 
     import numpy as np
@@ -54,6 +62,7 @@ def main():
     from repro.configs import registry
     from repro.core.sparsity import SparsityConfig
     from repro.models import model as M
+    from repro.obs import Recorder, percentile, profile_ctx
     from repro.serve.engine import (ContinuousEngine, Engine, Request,
                                     ServeConfig)
     from repro.train import checkpoint as ckpt_mod
@@ -108,9 +117,19 @@ def main():
         reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=args.max_new,
                         arrival=i * args.arrival_every)
                 for i in range(args.requests)]
-        eng = ContinuousEngine(cfg, params, scfg)
+        recorder = (Recorder(args.obs, meta={"launcher": "serve",
+                                             "arch": args.arch})
+                    if args.obs else None)
+        eng = ContinuousEngine(cfg, params, scfg, recorder=recorder)
         t0 = time.perf_counter()
-        outs = eng.serve(reqs)
+        try:
+            with profile_ctx(args.profile):
+                outs = eng.serve(reqs)
+        finally:
+            if recorder is not None:
+                recorder.close()
+                print(f"[serve] telemetry -> {args.obs} "
+                      f"({recorder.n_events} events)")
         dt = time.perf_counter() - t0
         st = eng.stats
         n_tok = sum(len(v) for v in outs.values())
@@ -121,8 +140,8 @@ def main():
               f"prefill_chunks={st['prefill_chunks']} "
               f"peak_pages={st['peak_pages']}/{st['num_pages']} "
               f"traces={st['decode_traces']}/{st['prefill_traces']} "
-              f"p50_lat={np.percentile(waits, 50) * 1e3:.1f}ms "
-              f"p99_lat={np.percentile(waits, 99) * 1e3:.1f}ms")
+              f"p50_lat={percentile(waits, 50) * 1e3:.1f}ms "
+              f"p99_lat={percentile(waits, 99) * 1e3:.1f}ms")
         print("[serve] first sequence:", outs[0][:16].tolist())
         return outs
 

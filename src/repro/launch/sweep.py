@@ -52,6 +52,13 @@ def _parse():
     ap.add_argument("--tag", default="sweep",
                     help="artifact meta tag (ledger meta.tag)")
     ap.add_argument("--out", default="SWEEP_mnist.json")
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="flight-recorder JSONL sink: rank/prune/"
+                         "quarantine round events; render with "
+                         "repro.launch.obs_report")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the sweep in a jax.profiler trace written "
+                         "to DIR (kernels show up named by KernelSpec)")
     return ap.parse_args()
 
 
@@ -61,6 +68,7 @@ def main():
 
     from repro.configs.base import SweepConfig
     from repro.data.mnist import paper_dataset
+    from repro.obs import Recorder, profile_ctx
     from repro.search import CandidateSpec, bucket, run_sweep
 
     # output width = smallest block multiple holding the 32 padded classes
@@ -107,8 +115,18 @@ def main():
           f"{cfg.rounds} rounds x {cfg.steps_per_round} steps, "
           f"engine={eng}")
     print(f"[sweep] optim={args.optim} update path: {path}")
-    result = run_sweep(specs, x_train, t_train, x_eval, t_eval, cfg,
-                       tag=args.tag)
+    recorder = (Recorder(args.obs, meta={"launcher": "sweep",
+                                         "tag": args.tag})
+                if args.obs else None)
+    try:
+        with profile_ctx(args.profile):
+            result = run_sweep(specs, x_train, t_train, x_eval, t_eval, cfg,
+                               tag=args.tag, recorder=recorder)
+    finally:
+        if recorder is not None:
+            recorder.close()
+            print(f"[sweep] telemetry -> {args.obs} "
+                  f"({recorder.n_events} events)")
     led = result.ledger
     led.save(args.out)
 

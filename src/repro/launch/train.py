@@ -43,6 +43,13 @@ def _parse():
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a crash at this step (restart test)")
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="flight-recorder JSONL sink (obs/telemetry.py): "
+                         "per-step records + guardian/checkpoint events; "
+                         "render with repro.launch.obs_report")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the run in a jax.profiler trace written to "
+                         "DIR (kernels show up named by KernelSpec)")
     return ap.parse_args()
 
 
@@ -61,6 +68,7 @@ def main():
     from repro.data.pipeline import LMTokenPipeline
     from repro.launch.mesh import make_local_mesh
     from repro.models import model as M
+    from repro.obs import Recorder, profile_ctx
     from repro.optim import cosine_schedule, fused_adam, fused_sgd
     from repro.parallel import hints
     from repro.parallel import sharding as sh
@@ -121,7 +129,18 @@ def main():
     loop_cfg = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
                                ckpt_every=args.ckpt_every,
                                fail_at_step=args.fail_at)
-    result = run(loop_cfg, train_step, params, opt_state, pipeline)
+    recorder = (Recorder(args.obs, meta={"launcher": "train",
+                                         "arch": args.arch})
+                if args.obs else None)
+    try:
+        with profile_ctx(args.profile):
+            result = run(loop_cfg, train_step, params, opt_state, pipeline,
+                         recorder=recorder)
+    finally:
+        if recorder is not None:
+            recorder.close()
+            print(f"[train] telemetry -> {args.obs} "
+                  f"({recorder.n_events} events)")
     print(f"[train] finished at step {result['step']}; "
           f"stragglers={result['straggler_count']}")
     if result["history"]:

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import SweepConfig
+from repro.obs import telemetry as obs
 from repro.search import cohorts as ch
 from repro.search import population as pop
 from repro.search.ledger import Ledger, MemberRecord, make_meta
@@ -125,7 +126,7 @@ def _score(loss: float, out_width: int) -> float:
 
 
 def _quarantine(st: CohortState, rec: MemberRecord, rnd: int,
-                global_step: int):
+                global_step: int, recorder: "obs.Recorder | None" = None):
     """Fault-isolate a diverged member MID-round: zero its mask entry
     (its — possibly non-finite — loss drops out of the shared-batch
     objective, and member independence makes the surviving members'
@@ -138,16 +139,30 @@ def _quarantine(st: CohortState, rec: MemberRecord, rnd: int,
     st.hyp = st.hyp.at[rec.slot].set(0.0)
     rec.pruned_at = rnd
     rec.quarantined_at = {"round": rnd, "step": global_step}
+    if recorder is not None:
+        recorder.count("sweep.quarantined")
+        recorder.emit(obs.SweepRound(
+            action="quarantine", round=rnd, member=rec.member,
+            cohort=rec.cohort, slot=rec.slot,
+            detail={"step": global_step}))
 
 
 def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
               x_eval, t_eval, cfg: SweepConfig, *,
-              tag: str = "") -> SweepResult:
+              tag: str = "",
+              recorder: "obs.Recorder | None" = None) -> SweepResult:
     """Train all candidates population-parallel and successively halve.
 
     x_* [N, n_in] float, t_* [N, n_classes] one-hot (padded per cohort to
     its output width).  Returns the lineage ledger (winner marked) and
-    the final cohort states."""
+    the final cohort states.
+
+    ``recorder`` (obs.Recorder) gets one ``obs.SweepRound`` event per
+    scheduler decision — rank (once per round, the scored table in
+    ``detail``), prune and quarantine (one per affected member, its
+    cohort/slot attached), winner — so a sweep's ledger and its
+    telemetry share one timeline.  All values are host floats the
+    scheduler already fetched for ranking."""
     specs = list(specs)
     x_train = np.asarray(x_train, np.float32)
     t_train = np.asarray(t_train, np.float32)
@@ -226,7 +241,8 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
                         if cfg.quarantine and (
                                 not math.isfinite(float(loss))
                                 or health[rec.slot] > 0):
-                            _quarantine(st, rec, rnd, global_step)
+                            _quarantine(st, rec, rnd, global_step,
+                                        recorder=recorder)
             global_step += 1
 
         # -- eval: vectorized per-member loss, live members only ranked
@@ -240,16 +256,32 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
                     rec.eval_losses.append(float(loss))
                     rec.rounds_survived = rnd + 1
                     scored.append((_score(loss, st.out_width), ci, rec.slot))
+        if recorder is not None and scored:
+            recorder.emit(obs.SweepRound(
+                action="rank", round=rnd,
+                detail={"live": len(scored), "scores": [
+                    {"member": states[ci].records[slot].member,
+                     "cohort": ci, "slot": slot,
+                     "score": s if math.isfinite(s) else None}
+                    for s, ci, slot in sorted(scored)]}))
 
         # -- halve: keep the globally best keep_fraction, zero the rest
         if rnd < cfg.rounds - 1 and len(scored) > 1:
             scored.sort()
             n_keep = max(1, int(math.ceil(len(scored) * cfg.keep_fraction)))
-            for _, ci, slot in scored[n_keep:]:
+            for sc, ci, slot in scored[n_keep:]:
                 st = states[ci]
                 st.mask = st.mask.at[slot].set(0.0)
                 st.hyp = st.hyp.at[slot].set(0.0)
                 st.records[slot].pruned_at = rnd
+                if recorder is not None:
+                    recorder.count("sweep.pruned")
+                    recorder.emit(obs.SweepRound(
+                        action="prune", round=rnd,
+                        member=st.records[slot].member, cohort=ci,
+                        slot=slot,
+                        detail={"score": sc if math.isfinite(sc)
+                                else None}))
             n_live = n_keep
 
     # -- winner: best width-normalized final eval score among survivors
@@ -259,6 +291,12 @@ def run_sweep(specs: Sequence[pop.CandidateSpec], x_train, t_train,
     if best is not None and math.isfinite(best[0]):
         for m in ledger.members:
             m.winner = m.member == best[1]
+        if recorder is not None:
+            w = next(m for m in ledger.members if m.winner)
+            recorder.emit(obs.SweepRound(
+                action="winner", round=cfg.rounds - 1, member=w.member,
+                cohort=w.cohort, slot=w.slot,
+                detail={"score": best[0]}))
     ledger.meta["live_at_end"] = n_live
     ledger.meta["quarantined"] = sum(
         1 for m in ledger.members if m.quarantined_at is not None)

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
+from repro.obs import telemetry as obs
 from repro.serve.paged import PagePool
 from repro.train.steps import (make_decode_step, make_paged_prefill_step,
                                make_prefill_step)
@@ -218,7 +219,8 @@ _FREE, _PREFILL, _DECODE = 0, 1, 2
 
 class _Slot:
     __slots__ = ("state", "req", "pages", "cache_len", "prefill_pos", "out",
-                 "last_tok", "t_admit", "t_wall")
+                 "last_tok", "t_admit", "t_wall", "t_first", "t_last",
+                 "first_tick", "chunks")
 
     def __init__(self):
         self.state = _FREE
@@ -230,6 +232,13 @@ class _Slot:
         self.last_tok = 0         # sampled, not yet fed through decode
         self.t_admit = 0
         self.t_wall = 0.0
+        # span bookkeeping (obs.RequestSpan): first-token wall time /
+        # tick, previous-token wall time (inter-token latency), and the
+        # number of fixed-shape prefill chunks this request consumed
+        self.t_first = -1.0
+        self.t_last = -1.0
+        self.first_tick = -1
+        self.chunks = 0
 
 
 class ContinuousEngine:
@@ -240,10 +249,23 @@ class ContinuousEngine:
     tokens} (variable length: a slot frees the moment its request hits
     EOS or its own max_new — that freed capacity is the throughput win
     over the static engine).  ``stats`` carries per-request latencies
-    and the page accounting afterwards."""
+    and the page accounting afterwards.
+
+    With a ``recorder`` (obs.Recorder) attached, every finished request
+    emits one ``obs.RequestSpan`` reconstructing its whole lifecycle
+    (enqueue → admit → prefill chunks → first token → finish, with the
+    outcome eos | max_new | guard), TTFT and inter-token latencies land
+    in histograms, and page-pool / slot-occupancy gauges refresh every
+    scheduler tick.  All of it rides values the scheduler already
+    pulled to host (the sampled token, the guard flag) — no extra
+    syncs, no traced ops, and the ``decode_traces == 1`` /
+    ``prefill_traces == 1`` compile-once contract holds with telemetry
+    on (regression-tested)."""
 
     def __init__(self, cfg: ArchConfig, params,
-                 serve_cfg: ServeConfig | None = None):
+                 serve_cfg: ServeConfig | None = None,
+                 recorder: "obs.Recorder | None" = None):
+        self.rec = recorder
         self.scfg = serve_cfg or ServeConfig()
         if self.scfg.engine is not None:
             cfg = dataclasses.replace(cfg, engine=self.scfg.engine)
@@ -335,22 +357,46 @@ class ContinuousEngine:
         pf_cursor = 0               # round-robin over prefilling slots
         t_serve0 = time.perf_counter()
 
-        def finish(s: _Slot):
+        rec = self.rec
+
+        def finish(s: _Slot, outcome: str):
             r = s.req
             outputs[r.rid] = np.asarray(s.out, np.int32)
+            ttft = s.t_first - s.t_wall if s.t_first >= 0 else -1.0
             lat[r.rid] = {"arrival": r.arrival, "admitted": s.t_admit,
-                          "finished": tick,
+                          "finished": tick, "outcome": outcome,
+                          "ttft_s": ttft, "first_token_tick": s.first_tick,
+                          "prefill_chunks": s.chunks,
+                          "n_tokens": len(s.out),
                           "wall_s": time.perf_counter() - s.t_wall}
+            if rec is not None:
+                rec.count(f"serve.finish.{outcome}")
+                if ttft >= 0:
+                    rec.observe("serve.ttft_s", ttft)
+                rec.emit(obs.RequestSpan(
+                    rid=r.rid, outcome=outcome, enqueue_tick=r.arrival,
+                    admit_tick=s.t_admit, first_token_tick=s.first_tick,
+                    finish_tick=tick, prefill_chunks=s.chunks,
+                    n_tokens=len(s.out), ttft_s=ttft,
+                    wall_s=lat[r.rid]["wall_s"]))
             pool_acct.release(s.pages)
             s.__init__()            # back to FREE
 
-        def step_done(s: _Slot, tok: int) -> bool:
-            """Record one sampled token; True when the request completed."""
+        def step_done(s: _Slot, tok: int) -> str | None:
+            """Record one sampled token; the outcome string ("eos" |
+            "max_new") when the request completed, else None."""
+            now = time.perf_counter()
+            if not s.out:           # first token of the request
+                s.t_first = now
+                s.first_tick = tick
+            elif rec is not None and s.t_last >= 0:
+                rec.observe("serve.itl_s", now - s.t_last)
+            s.t_last = now
             s.out.append(tok)
             s.last_tok = tok
             if eos >= 0 and tok == eos:
-                return True
-            return len(s.out) >= s.req.max_new_tokens
+                return "eos"
+            return "max_new" if len(s.out) >= s.req.max_new_tokens else None
 
         while queue or any(s.state != _FREE for s in slots):
             # ---- admission: refill free slots from the arrival queue
@@ -391,6 +437,7 @@ class ContinuousEngine:
                     jnp.asarray(s.prefill_pos, jnp.int32),
                     jnp.asarray(ptrow), jnp.asarray(cl, jnp.int32))
                 prefill_chunks += 1
+                s.chunks += 1
                 s.prefill_pos += cl
                 s.cache_len = s.prefill_pos
                 if s.prefill_pos == len(prompt):
@@ -399,11 +446,12 @@ class ContinuousEngine:
                     if guard and bad:
                         self.nonfinite_terminated += 1
                         s.out.append(eos if eos >= 0 else 0)
-                        finish(s)
+                        finish(s, "guard")
                     else:
                         key = jax.random.fold_in(root, 2 * tick)
-                        if step_done(s, self._sample_host(row, key)):
-                            finish(s)
+                        oc = step_done(s, self._sample_host(row, key))
+                        if oc:
+                            finish(s, oc)
                         else:
                             s.state = _DECODE
 
@@ -430,12 +478,24 @@ class ContinuousEngine:
                     if guard and bad[i]:
                         self.nonfinite_terminated += 1
                         s.out.append(eos if eos >= 0 else 0)
-                        finish(s)
-                    elif step_done(s, int(tok[i])):
-                        finish(s)
+                        finish(s, "guard")
+                    else:
+                        oc = step_done(s, int(tok[i]))
+                        if oc:
+                            finish(s, oc)
             elif not pf_slots and queue:
                 # idle: jump the clock to the next arrival
                 tick = max(tick, queue[0].arrival - 1)
+            if rec is not None:
+                # occupancy gauges every tick: host dict writes off
+                # accounting the scheduler keeps anyway
+                rec.gauge("serve.pages_in_use", pool_acct.in_use)
+                rec.gauge("serve.pages_free", pool_acct.free_pages)
+                states = [s.state for s in slots]
+                rec.gauge("serve.slots_decode", states.count(_DECODE))
+                rec.gauge("serve.slots_prefill", states.count(_PREFILL))
+                rec.gauge("serve.slots_free", states.count(_FREE))
+                rec.count("serve.ticks")
             tick += 1
 
         self.stats = {

@@ -47,6 +47,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.obs import telemetry as obs
 from repro.train import checkpoint as ckpt_mod
 
 
@@ -101,6 +102,16 @@ class StragglerMonitor:
         self.times.append(dt)
 
 
+def _batch_tokens(batch) -> int:
+    """Token count of a host-side batch for tokens/s: the ``tokens``
+    field's element count when present (LM pipelines), else the leading
+    dim of the first array leaf (generic supervised batches)."""
+    if isinstance(batch, dict) and "tokens" in batch:
+        return int(np.asarray(batch["tokens"]).size)
+    leaves = jax.tree.leaves(batch)
+    return int(np.asarray(leaves[0]).shape[0]) if leaves else 0
+
+
 def _restore_into(cfg, step, state_like, pipeline):
     tree, extra = ckpt_mod.restore(cfg.ckpt_dir, step, state_like)
     pipeline.step = extra["data_state"]["step"]
@@ -109,7 +120,8 @@ def _restore_into(cfg, step, state_like, pipeline):
 
 
 def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
-        log: Callable[[str], None] = print) -> dict:
+        log: Callable[[str], None] = print,
+        recorder: "obs.Recorder | None" = None) -> dict:
     """Returns {params, opt_state, step, history, straggler_count, guardian}.
 
     ``train_step(params, opt_state, batch, step[, lr_scale]) ->
@@ -118,6 +130,14 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
     (train/steps.make_train_step provides it) is required only when a
     ``GuardianConfig`` is set.  ``pipeline`` is a restartable iterator
     with ``state()`` / seed+step attributes (data/pipeline.py).
+
+    ``recorder`` (obs.Recorder) gets one ``TrainStep`` event per ADOPTED
+    step plus ``Guardian`` (trip/rollback/backoff/recovery) and
+    ``Checkpoint`` (save/promote/gc) lifecycle events.  No-extra-device-
+    sync: every recorded value is one the loop already fetched for its
+    own logic — ``loss`` is synced for honest step timing regardless,
+    ``nonfinite`` only on the guardian path (``obs.NOT_SAMPLED`` when
+    the guardian is off rather than forcing a transfer).
     """
     g = cfg.guardian
     saver = ckpt_mod.AsyncSaver()
@@ -157,6 +177,9 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
                            on_straggler=lambda s, dt, med: log(
                                f"[straggler] step {s}: {dt*1e3:.1f}ms vs median {med*1e3:.1f}ms"))
     history = []
+    rec = recorder
+    dt_ema: float | None = None
+    awaiting_recovery = False
     try:
         while step < cfg.total_steps:
             if cfg.fail_at_step is not None and step == cfg.fail_at_step:
@@ -197,6 +220,12 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
                     # adopted); roll back to the last healthy checkpoint
                     trips.append({"step": step, "data_step": data_step,
                                   "reason": why, "lr_scale": lr_scale})
+                    if rec is not None:
+                        rec.count("train.guardian.trips")
+                        rec.emit(obs.Guardian(
+                            action="trip", step=step,
+                            detail={"reason": why, "data_step": data_step,
+                                    "lr_scale": lr_scale}))
                     if g.skip_offending_batch:
                         bad_data_steps.add(data_step)
                     if len(trips) > g.max_retries:
@@ -210,11 +239,21 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
                         raise GuardianTripped(
                             f"guardian tripped at step {step} ({why}) with "
                             "no healthy checkpoint to roll back to", trips)
+                    tripped_at = step
                     params, opt_state, step = _restore_into(
                         cfg, h, state_like, pipeline)
                     lr_scale *= g.lr_backoff
                     loss_win.clear()
                     pending_healthy.clear()
+                    if rec is not None:
+                        rec.emit(obs.Guardian(
+                            action="rollback", step=step,
+                            detail={"from_step": tripped_at}))
+                        rec.emit(obs.Guardian(
+                            action="backoff", step=step,
+                            detail={"lr_scale": lr_scale}))
+                        rec.gauge("train.lr_scale", lr_scale)
+                    awaiting_recovery = True
                     log(f"[guardian] TRIP: {why} — rolled back to healthy "
                         f"step {step}, lr_scale -> {lr_scale:.4g}, retry "
                         f"{len(trips)}/{g.max_retries}")
@@ -223,6 +262,25 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
 
             params, opt_state = new_params, new_opt
             mon.observe(step, dt)
+            if rec is not None:
+                if awaiting_recovery:
+                    # first step adopted after a rollback: the run is live
+                    # again at the reduced lr
+                    rec.emit(obs.Guardian(
+                        action="recovery", step=step,
+                        detail={"trips": len(trips),
+                                "lr_scale": lr_scale}))
+                    awaiting_recovery = False
+                dt_ema = dt if dt_ema is None else 0.9 * dt_ema + 0.1 * dt
+                n_tok = _batch_tokens(batch)
+                rec.count("train.steps")
+                rec.observe("train.dt_s", dt)
+                rec.emit(obs.TrainStep(
+                    step=step, loss=loss,
+                    nonfinite=(nonfinite if g is not None
+                               else obs.NOT_SAMPLED),
+                    lr_scale=lr_scale, dt_s=dt, dt_ema_s=dt_ema,
+                    tokens_per_s=(n_tok / dt if dt > 0 else 0.0)))
             step += 1
             if step % cfg.log_every == 0 or step == cfg.total_steps:
                 history.append({"step": step, "loss": loss, "dt_s": dt})
@@ -232,11 +290,19 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
                            {"params": params, "opt": opt_state},
                            extra=_save_extra(),
                            full_checksum=cfg.full_checksum)
+                if rec is not None:
+                    rec.count("train.ckpt.saves")
+                    rec.emit(obs.Checkpoint(action="save", step=step,
+                                            detail={"async": True}))
                 if g is not None:
                     pending_healthy.append(step)
                 if cfg.keep_last_k is not None:
-                    ckpt_mod.gc_checkpoints(cfg.ckpt_dir, cfg.keep_last_k,
-                                            log=log)
+                    removed = ckpt_mod.gc_checkpoints(
+                        cfg.ckpt_dir, cfg.keep_last_k, log=log)
+                    if rec is not None and removed:
+                        rec.emit(obs.Checkpoint(
+                            action="gc", step=step,
+                            detail={"removed": list(removed)}))
             if g is not None:
                 # promote checkpoints that survived the health window
                 while pending_healthy and (
@@ -246,6 +312,10 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
                     if s in comp:
                         ckpt_mod.mark_healthy(cfg.ckpt_dir, s)
                         pending_healthy.pop(0)
+                        if rec is not None:
+                            rec.emit(obs.Checkpoint(
+                                action="promote", step=s,
+                                detail={"survived": g.health_window}))
                     elif comp and s < comp[-1]:
                         pending_healthy.pop(0)   # overwritten or GC'd
                     else:
@@ -255,8 +325,15 @@ def run(cfg: TrainLoopConfig, train_step, params, opt_state, pipeline,
         ckpt_mod.save(cfg.ckpt_dir, step,
                       {"params": params, "opt": opt_state},
                       extra=_save_extra(), full_checksum=cfg.full_checksum)
+        if rec is not None:
+            rec.emit(obs.Checkpoint(action="save", step=step,
+                                    detail={"final": True}))
         if cfg.keep_last_k is not None:
-            ckpt_mod.gc_checkpoints(cfg.ckpt_dir, cfg.keep_last_k, log=log)
+            removed = ckpt_mod.gc_checkpoints(cfg.ckpt_dir, cfg.keep_last_k,
+                                              log=log)
+            if rec is not None and removed:
+                rec.emit(obs.Checkpoint(action="gc", step=step,
+                                        detail={"removed": list(removed)}))
     guardian_info = {"trips": trips, "lr_scale": lr_scale,
                      "skipped_data_steps": sorted(bad_data_steps)}
     return {"params": params, "opt_state": opt_state, "step": step,
